@@ -1,0 +1,46 @@
+"""Render the §Dry-run / §Roofline markdown tables from dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.export_tables [tag] > table.md
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.roofline_table import load_rows
+
+
+def fmt(tag="baseline", mesh=None):
+    rows = load_rows(tag=tag)
+    rows = [r for r in rows if mesh is None or r["mesh"] == mesh]
+    out = ["| arch | shape | mesh | compute | HBM | collective | dominant | "
+           "peak GiB | useful-FLOP | MFU |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']*1e3:.1f} ms | {r['memory_s']*1e3:.1f} ms "
+            f"| {r['collective_s']*1e3:.1f} ms | **{r['dominant']}** "
+            f"| {r['peak_memory_bytes']/2**30:.2f} "
+            f"| {r['useful_flop_ratio']:.3f} | {r['mfu']:.3f} |")
+    return "\n".join(out)
+
+
+def skips(tag="baseline"):
+    import json, os
+    path = os.path.join("experiments/dryrun", f"{tag}_summary.json")
+    with open(path) as f:
+        rows = json.load(f)
+    out = ["| arch | shape | mesh | reason |", "|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") == "SKIP":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                       f"| {r['reason']} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    tag = sys.argv[1] if len(sys.argv) > 1 else "baseline"
+    print(fmt(tag))
+    print()
+    print("### Skips\n")
+    print(skips(tag))

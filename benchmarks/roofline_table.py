@@ -1,0 +1,46 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json).
+
+Prints per (arch × shape × mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs and MFU at the roofline step time.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_rows(out_dir="experiments/dryrun", tag="baseline"):
+    rows = []
+    summary = os.path.join(out_dir, f"{tag}_summary.json")
+    if os.path.exists(summary):
+        with open(summary) as f:
+            return [r for r in json.load(f) if r.get("status") == "OK"]
+    for f in sorted(glob.glob(os.path.join(out_dir, f"{tag}_*.json"))):
+        if f.endswith("_summary.json"):
+            continue
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def roofline_table(tag="baseline", out_dir="experiments/dryrun"):
+    rows = load_rows(out_dir, tag)
+    out = []
+    if not rows:
+        print(f"  (no dry-run artifacts with tag {tag!r} — run "
+              f"PYTHONPATH=src python -m repro.launch.dryrun first)")
+        return out
+    print(f"\n== Roofline ({tag}): compute / memory / collective per step ==")
+    print(f"  {'arch':26s} {'shape':12s} {'mesh':8s} "
+          f"{'comp_ms':>8s} {'mem_ms':>8s} {'coll_ms':>8s} "
+          f"{'dominant':>10s} {'peakGiB':>8s} {'MFU':>6s}")
+    for r in rows:
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        print(f"  {r['arch']:26s} {r['shape']:12s} {r['mesh']:8s} "
+              f"{r['compute_s']*1e3:8.2f} {r['memory_s']*1e3:8.2f} "
+              f"{r['collective_s']*1e3:8.2f} {r['dominant']:>10s} "
+              f"{r['peak_memory_bytes']/2**30:8.2f} {r['mfu']:6.3f}")
+        out.append((name, r["step_time_s"] * 1e6,
+                    f"dom={r['dominant']};mfu={r['mfu']:.3f}"))
+    return out

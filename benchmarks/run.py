@@ -1,0 +1,37 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run table2 roofline
+"""
+import sys
+
+from benchmarks import tables
+from benchmarks.roofline_table import roofline_table
+from benchmarks.kernel_bench import kernel_bench
+
+ALL = {
+    "table1": tables.table1_kd_tas,
+    "table2": tables.table2_stage_times,
+    "table3": tables.table3_accuracy,
+    "table4": tables.table4_device_times,
+    "table5": tables.table5_inference,
+    "sweeps": tables.hyperparam_sweep,
+    "noniid": tables.noniid_extension,
+    "kernels": kernel_bench,
+    "roofline": roofline_table,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(ALL)
+    rows = []
+    for name in which:
+        rows.extend(ALL[name]() or [])
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == '__main__':
+    main()

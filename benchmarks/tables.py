@@ -1,0 +1,348 @@
+"""One benchmark per paper table (I–V) + the hyperparameter sweeps
+(Figs. 9–12). Each function returns a list of CSV rows
+(name, us_per_call, derived) and prints a human-readable block.
+
+Time accounting notes (see EXPERIMENTS.md §Tables):
+- Table II async wall-clock follows the paper's accounting: the run ends
+  when every client has delivered its E/n quota, so the slowest client
+  gates — this reproduces the paper's 6h31m (HMDB51) to within rounding.
+- The paper's *synchronous* rounds carry a measured coordination overhead
+  (barrier + 4-way model upload contention). Back-solving Table II gives
+  overhead ≈ 0.67× round compute on BOTH datasets (0.672 HMDB51, 0.660
+  UCF101) — we use SYNC_OVERHEAD_FRAC = 0.67 and report the fit.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import RESNET18, RESNET26, RESNET34, get_config
+from repro.configs.resnet3d import BLOCKS
+from repro.core import distill, simulator
+from repro.core.simulator import (JETSON_FLEET_HMDB51, JETSON_FLEET_UCF101)
+from repro.data import BatchLoader, SyntheticActionDataset, iid_partition
+from repro.models import registry
+from repro.types import DistillConfig, FedConfig, ModelConfig
+
+SYNC_OVERHEAD_FRAC = 0.67   # fitted from paper Table II (see module doc)
+LOCAL_EPOCHS = 3            # paper §V-B
+GLOBAL_EPOCHS = 80          # paper Table II
+
+
+def _fmt_h(s: float) -> str:
+    h = int(s // 3600)
+    m = int((s % 3600) // 60)
+    return f"{h}h{m:02d}m"
+
+
+def _mk(name):
+    import dataclasses
+    from repro.configs.resnet3d import KINETICS_CLASSES
+    depth = 2 + 2 * sum(BLOCKS[name])
+    return ModelConfig(name=name, family="resnet3d", num_layers=depth,
+                       d_model=64, num_heads=0, num_kv_heads=0, d_ff=0,
+                       vocab_size=KINETICS_CLASSES,
+                       num_classes=KINETICS_CLASSES, source="paper §V-A")
+
+
+# ---------------------------------------------------------------------------
+# Table I — KD with 0/1/2/3 TAs: time grows sharply, accuracy saturates
+# ---------------------------------------------------------------------------
+
+def table1_kd_tas():
+    print("\n== Table I: knowledge distillation vs number of TAs ==")
+    chains = {
+        0: [RESNET34, RESNET18],
+        1: [RESNET34, RESNET26, RESNET18],
+        2: [RESNET34, _mk("resnet3d-28"), _mk("resnet3d-24"), RESNET18],
+        3: [RESNET34, _mk("resnet3d-30"), RESNET26, _mk("resnet3d-22"),
+            RESNET18],
+    }
+    paper_time = {0: "44h58m (+0%)", 1: "55h23m (+23.2%)",
+                  2: "69h35m (+54.7%)", 3: "85h47m (+90.8%)"}
+    paper_acc = {0: 53.8, 1: 54.6, 2: 54.8, 3: 54.9}
+    # FLOPs-proportional full-scale time model (Kinetics: 306k clips/epoch)
+    rows = []
+    t0 = None
+    for n_tas, chain in chains.items():
+        pred = distill.chain_time_model(chain, dataset_items=306_245,
+                                        epochs=200)
+        if t0 is None:
+            t0 = pred["total_s"]
+        inc = 100.0 * (pred["total_s"] / t0 - 1.0)
+        print(f"  {n_tas} TAs: predicted {_fmt_h(pred['total_s'])} "
+              f"(+{inc:.1f}%)   [paper: {paper_time[n_tas]}, "
+              f"per-clip acc {paper_acc[n_tas]}%]")
+        rows.append((f"table1_kd_{n_tas}tas", pred["total_s"] * 1e6,
+                     f"+{inc:.1f}%_vs_0tas"))
+    # smoke-scale accuracy trend: 1 TA >= no TA (measured)
+    ds = SyntheticActionDataset(num_classes=8, samples_per_class=32,
+                                noise=0.35, seed=0)
+    loader = BatchLoader(ds, 8, steps=20, seed=0)
+    eval_b = list(ds.batches(8, 6, seed=99))
+    dcfg = DistillConfig(alpha=0.5, lr=0.02)
+    accs = {}
+    for n_tas, chain in list(chains.items())[:2]:
+        rchain = [c.reduced() for c in chain]
+        t_start = time.perf_counter()
+        _, stages = distill.run_chain(rchain, dcfg, loader, eval_b,
+                                      steps_per_stage=20, seed=0,
+                                      trained_teacher_steps=20)
+        accs[n_tas] = stages[-1].accuracy
+        rows.append((f"table1_smoke_{n_tas}tas_acc",
+                     (time.perf_counter() - t_start) * 1e6,
+                     f"acc={stages[-1].accuracy:.3f}"))
+    print(f"  smoke-scale student accuracy: no-TA {accs[0]:.3f}, "
+          f"1-TA {accs[1]:.3f} (paper trend: TA >= no-TA)")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table II — stage wall-times (KD / fine-tune central / sync / async)
+# ---------------------------------------------------------------------------
+
+def _table2_times(fleet, epochs=GLOBAL_EPOCHS, H=LOCAL_EPOCHS):
+    n = len(fleet)
+    rounds = epochs / n
+    per_update = [p.epoch_seconds * H for p in fleet]
+    async_s = rounds * max(per_update)            # slowest client's quota
+    sync_s = rounds * max(per_update) * (1 + SYNC_OVERHEAD_FRAC)
+    return sync_s, async_s
+
+
+def table2_stage_times():
+    print("\n== Table II: stage wall-times (simulated fleet) ==")
+    paper = {
+        ("HMDB51", "sync"): 10 * 3600 + 54 * 60,
+        ("HMDB51", "async"): 6 * 3600 + 31 * 60,
+        ("UCF101", "sync"): 74 * 3600 + 27 * 60,
+        ("UCF101", "async"): 44 * 3600 + 7 * 60,
+    }
+    rows = []
+    for name, fleet in (("HMDB51", JETSON_FLEET_HMDB51),
+                        ("UCF101", JETSON_FLEET_UCF101)):
+        sync_s, async_s = _table2_times(fleet)
+        red = 1 - async_s / sync_s
+        for kind, ours in (("sync", sync_s), ("async", async_s)):
+            ref = paper[(name, kind)]
+            err = 100 * (ours - ref) / ref
+            print(f"  {name:7s} {kind:5s}: {_fmt_h(ours)} "
+                  f"(paper {_fmt_h(ref)}, {err:+.1f}%)")
+            rows.append((f"table2_{name}_{kind}", ours * 1e6,
+                         f"paper_err={err:+.1f}%"))
+        print(f"  {name:7s} async reduction: {100*red:.1f}% "
+              f"(paper claims ~40%)")
+        rows.append((f"table2_{name}_reduction", 0.0, f"{100*red:.1f}%"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table III — per-clip / per-video accuracy, central vs sync vs async
+# ---------------------------------------------------------------------------
+
+def _per_video_acc(params, cfg, ds, n_videos=16, clips_per_video=4,
+                   seed=123):
+    """Paper metric: mean of class scores over a video's clips."""
+    rng = np.random.default_rng(seed)
+    hits_clip = hits_video = tot_clips = 0
+    import functools
+    logits_j = jax.jit(functools.partial(registry.logits_fn, cfg=cfg))
+    for _ in range(n_videos):
+        c = int(rng.integers(0, ds.num_classes))
+        clips = np.stack([ds.render(c, rng) for _ in range(clips_per_video)])
+        logits = logits_j(params=params,
+                          batch={"clips": jnp.asarray(clips)})
+        pred_clips = np.asarray(jnp.argmax(logits, axis=-1))
+        hits_clip += int((pred_clips == c).sum())
+        tot_clips += clips_per_video
+        if int(np.argmax(np.asarray(logits).mean(axis=0))) == c:
+            hits_video += 1
+    return hits_clip / tot_clips, hits_video / n_videos
+
+
+def table3_accuracy():
+    print("\n== Table III: per-clip / per-video accuracy "
+          "(smoke scale, synthetic HMDB51 stand-in) ==")
+    cfg = RESNET18.reduced()
+    params0 = registry.init_params(jax.random.PRNGKey(0), cfg)
+    ds = SyntheticActionDataset(num_classes=8, samples_per_class=16,
+                                noise=0.4, seed=2)
+    fed = FedConfig(num_clients=4, global_epochs=24, local_iters_min=1,
+                    local_iters_max=3, lr=0.05, trainable="all")
+    parts = iid_partition(len(ds), 4)
+    data = [BatchLoader(ds, 8, steps=4, seed=k, indices=parts[k])
+            for k in range(4)]
+    rows = []
+
+    # central baseline
+    from repro.core.fedasync import make_client_step
+    from repro.optim import trainable_mask
+    step, opt = make_client_step(cfg, fed)
+    mask = trainable_mask(params0, "all")
+    p, st = params0, opt.init(params0)
+    for i, b in enumerate(ds.batches(8, 24, seed=0)):
+        p, st, _ = step(p, st, params0, b, mask)
+    central = p
+
+    res_sync = simulator.run_sync(params0, cfg, fed, JETSON_FLEET_HMDB51,
+                                  data)
+    res_async = simulator.run_async(params0, cfg, fed, JETSON_FLEET_HMDB51,
+                                    data)
+    paper = {"central": (57.3, 64.1), "sync": (54.4, 61.8),
+             "async": (55.6, 62.3)}
+    for name, params in (("central", central), ("sync", res_sync.params),
+                         ("async", res_async.params)):
+        t0 = time.perf_counter()
+        clip, video = _per_video_acc(params, cfg, ds)
+        dt = (time.perf_counter() - t0) * 1e6
+        pc, pv = paper[name]
+        print(f"  {name:8s}: per-clip {clip:.3f} per-video {video:.3f} "
+              f"(paper full-scale: {pc}% / {pv}%)")
+        rows.append((f"table3_{name}", dt,
+                     f"clip={clip:.3f};video={video:.3f}"))
+    # paper invariant: per-video >= per-clip (score averaging denoises)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table IV / V — per-device train & inference times
+# ---------------------------------------------------------------------------
+
+def _host_step_time(cfg, train=True, iters=3):
+    rng = np.random.default_rng(0)
+    from repro.types import ShapeConfig
+    shape = ShapeConfig("bench", seq_len=64, global_batch=4, kind="train")
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    batch = registry.synth_batch(rng, cfg, shape)
+    if train:
+        from repro.core.fedasync import make_client_step
+        from repro.optim import trainable_mask
+        step, opt = make_client_step(cfg, FedConfig())
+        mask = trainable_mask(params, "all")
+        st = opt.init(params)
+        step(params, st, params, batch, mask)          # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            p, st, _ = step(params, st, params, batch, mask)
+        jax.block_until_ready(p)
+    else:
+        import functools
+        f = jax.jit(functools.partial(registry.logits_fn, cfg=cfg))
+        f(params=params, batch=batch)                  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = f(params=params, batch=batch)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def table4_device_times():
+    print("\n== Table IV: per-local-epoch train time per device "
+          "(paper-measured profiles; host-measured reduced model) ==")
+    rows = []
+    for dsname, fleet in (("HMDB51", JETSON_FLEET_HMDB51),
+                          ("UCF101", JETSON_FLEET_UCF101)):
+        for p in fleet:
+            print(f"  {dsname:7s} {p.name:18s} {p.epoch_seconds:8.1f} s")
+            rows.append((f"table4_{dsname}_{p.name}",
+                         p.epoch_seconds * 1e6, "paper_profile"))
+    host = _host_step_time(RESNET18.reduced(), train=True)
+    print(f"  host (reduced resnet3d-18, 4-clip step): {host*1e3:.1f} ms")
+    rows.append(("table4_host_reduced_step", host * 1e6, "measured"))
+    return rows
+
+
+def table5_inference():
+    print("\n== Table V: test-set inference time per device ==")
+    rows = []
+    for dsname, fleet in (("HMDB51", JETSON_FLEET_HMDB51),
+                          ("UCF101", JETSON_FLEET_UCF101)):
+        for p in fleet:
+            print(f"  {dsname:7s} {p.name:18s} {p.test_seconds:8.1f} s")
+            rows.append((f"table5_{dsname}_{p.name}",
+                         p.test_seconds * 1e6, "paper_profile"))
+    host = _host_step_time(RESNET18.reduced(), train=False)
+    print(f"  host (reduced resnet3d-18, 4-clip fwd): {host*1e3:.1f} ms")
+    rows.append(("table5_host_reduced_fwd", host * 1e6, "measured"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Figs. 9–12 — staleness exponent a and mixing β sweeps
+# ---------------------------------------------------------------------------
+
+def hyperparam_sweep(quick=True):
+    print("\n== Figs. 9-12: async hyperparameter sweeps "
+          "(smoke scale; paper best: a=0.5, beta=0.7) ==")
+    cfg = RESNET18.reduced()
+    params0 = registry.init_params(jax.random.PRNGKey(0), cfg)
+    ds = SyntheticActionDataset(num_classes=8, samples_per_class=16,
+                                noise=0.4, seed=4)
+    parts = iid_partition(len(ds), 4)
+    rows = []
+
+    def run(a, beta):
+        fed = FedConfig(num_clients=4, global_epochs=16, local_iters_min=1,
+                        local_iters_max=3, lr=0.05, mixing_beta=beta,
+                        staleness_a=a, trainable="all")
+        data = [BatchLoader(ds, 8, steps=4, seed=k, indices=parts[k])
+                for k in range(4)]
+        res = simulator.run_async(params0, cfg, fed, JETSON_FLEET_HMDB51,
+                                  data)
+        tail = [l for _, _, l in res.history[-6:]]
+        return float(np.mean(tail))
+
+    a_vals = [0.0, 0.5, 0.9] if quick else [0.0, 0.3, 0.5, 0.9]
+    for a in a_vals:
+        t0 = time.perf_counter()
+        loss = run(a, 0.7)
+        rows.append((f"sweep_a_{a}", (time.perf_counter() - t0) * 1e6,
+                     f"tail_loss={loss:.4f}"))
+        print(f"  beta=0.7 a={a}: tail loss {loss:.4f}")
+    b_vals = [0.3, 0.7, 0.9] if quick else [0.3, 0.5, 0.7, 0.9]
+    for b in b_vals:
+        t0 = time.perf_counter()
+        loss = run(0.5, b)
+        rows.append((f"sweep_beta_{b}", (time.perf_counter() - t0) * 1e6,
+                     f"tail_loss={loss:.4f}"))
+        print(f"  a=0.5 beta={b}: tail loss {loss:.4f}")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: non-IID (Dirichlet) clients — the paper's named future work
+# ---------------------------------------------------------------------------
+
+def noniid_extension(quick=True):
+    """Async FL under Dirichlet label skew vs IID — the paper's §VI future
+    work ('how to handle non-iid data at the different clients')."""
+    print("\n== beyond-paper: non-IID (Dirichlet) vs IID clients ==")
+    from repro.data import dirichlet_partition
+    cfg = RESNET18.reduced()
+    params0 = registry.init_params(jax.random.PRNGKey(0), cfg)
+    ds = SyntheticActionDataset(num_classes=8, samples_per_class=16,
+                                noise=0.4, seed=6)
+    labels = np.repeat(np.arange(ds.num_classes), ds.samples_per_class)
+    fed = FedConfig(num_clients=4, global_epochs=16, local_iters_min=1,
+                    local_iters_max=3, lr=0.05, prox_theta=0.05,
+                    trainable="all")
+    rows = []
+    for name, parts in (
+            ("iid", iid_partition(len(ds), 4)),
+            ("dirichlet_0.5", dirichlet_partition(labels, 4, 0.5, seed=0)),
+            ("dirichlet_0.1", dirichlet_partition(labels, 4, 0.1, seed=0))):
+        data = [BatchLoader(ds, 8, steps=4, seed=k, indices=parts[k])
+                for k in range(4)]
+        t0 = time.perf_counter()
+        res = simulator.run_async(params0, cfg, fed, JETSON_FLEET_HMDB51,
+                                  data)
+        tail = float(np.mean([l for _, _, l in res.history[-6:]]))
+        rows.append((f"noniid_{name}", (time.perf_counter() - t0) * 1e6,
+                     f"tail_loss={tail:.4f}"))
+        print(f"  {name:15s}: tail loss {tail:.4f} "
+              f"(θ-proximal term damps client drift)")
+    return rows

@@ -1,0 +1,38 @@
+"""Asynchronous FL on a *transformer* (mamba2-130m reduced) — shows the
+paper's Algorithm 1 is model-agnostic across the assigned architectures,
+and reproduces the staleness-hyperparameter story (Figs. 9-10): a = 0.5
+beats a = 0 (no penalty) and a = 0.9 (over-penalized).
+
+    PYTHONPATH=src python examples/federated_async.py
+"""
+import numpy as np
+
+import jax
+
+from repro.configs import get_config
+from repro.core import simulator
+from repro.core.simulator import JETSON_FLEET_HMDB51
+from repro.data import BatchLoader, SyntheticLMDataset
+from repro.models import registry
+from repro.types import FedConfig
+
+cfg = get_config("mamba2-130m").reduced()
+params = registry.init_params(jax.random.PRNGKey(0), cfg)
+ds = SyntheticLMDataset(vocab=cfg.vocab_size, seq_len=32, seed=0)
+
+print(f"arch: {cfg.name} ({cfg.family}); fleet: "
+      f"{[p.name for p in JETSON_FLEET_HMDB51]}")
+
+for a in (0.0, 0.5, 0.9):
+    fed = FedConfig(num_clients=4, global_epochs=16, local_iters_min=1,
+                    local_iters_max=3, lr=0.05, mixing_beta=0.7,
+                    staleness_a=a)
+    data = [BatchLoader(ds, 4, steps=4, seed=k) for k in range(4)]
+    res = simulator.run_async(params, cfg, fed, JETSON_FLEET_HMDB51, data)
+    tail = float(np.mean([l for _, _, l in res.history[-6:]]))
+    print(f"  a={a:3.1f}: tail loss {tail:.4f}  "
+          f"wall {res.wall_clock_s/3600:.2f}h  "
+          f"staleness {dict(sorted(res.staleness_hist.items()))}")
+
+print("\npaper: a=0.5 converges fastest and reaches the best accuracy; "
+      "a=0 ignores staleness, a=0.9 over-damps fast clients.")

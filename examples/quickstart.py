@@ -1,0 +1,58 @@
+"""Quickstart: the paper's two-stage pipeline in ~60 lines.
+
+Stage 1 — knowledge distillation at the server (teacher ResNet3D-34 ->
+TA ResNet3D-26 -> student ResNet3D-18, reduced variants) on the "large"
+synthetic dataset.
+Stage 2 — asynchronous federated fine-tuning (paper Algorithm 1) of the
+student across a heterogeneous 4-device Jetson fleet (simulated clocks,
+real gradient updates) on the "small" synthetic dataset.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import RESNET18, RESNET26, RESNET34
+from repro.core import distill, simulator
+from repro.core.simulator import JETSON_FLEET_HMDB51
+from repro.data import BatchLoader, SyntheticActionDataset, iid_partition
+from repro.types import DistillConfig, FedConfig
+
+# ---------------- stage 1: server-side distillation -----------------------
+teacher, ta, student = (RESNET34.reduced(), RESNET26.reduced(),
+                        RESNET18.reduced())
+kinetics_like = SyntheticActionDataset(num_classes=8, samples_per_class=32,
+                                       noise=0.3, seed=0)
+loader = BatchLoader(kinetics_like, batch_size=8, steps=15, seed=0)
+eval_batches = list(kinetics_like.batches(8, 4, seed=99))
+
+dcfg = DistillConfig(alpha=0.5, lr=0.02,
+                     chain=(teacher.name, ta.name, student.name))
+student_params, stages = distill.run_chain(
+    [teacher, ta, student], dcfg, loader, eval_batches,
+    steps_per_stage=15, seed=0, trained_teacher_steps=15)
+for s in stages:
+    print(f"KD {s.teacher} -> {s.student}: loss {s.losses[0]:.2f} -> "
+          f"{s.losses[-1]:.2f}, eval acc {s.accuracy:.3f}")
+
+# ---------------- stage 2: async federated fine-tuning --------------------
+hmdb_like = SyntheticActionDataset(num_classes=8, samples_per_class=8,
+                                   noise=0.5, seed=5)
+fed = FedConfig(num_clients=4, global_epochs=16, local_iters_min=1,
+                local_iters_max=3, lr=0.02, mixing_beta=0.7,
+                staleness_a=0.5, prox_theta=0.01)
+parts = iid_partition(len(hmdb_like), fed.num_clients)
+client_data = [BatchLoader(hmdb_like, 4, steps=4, seed=k, indices=parts[k])
+               for k in range(fed.num_clients)]
+
+res = simulator.run_async(student_params, student, fed,
+                          JETSON_FLEET_HMDB51, client_data)
+print(f"\nasync FL: {fed.global_epochs} global epochs in "
+      f"{res.wall_clock_s/3600:.2f} simulated hours "
+      f"(final loss {res.final_loss:.3f})")
+print(f"staleness histogram: {res.staleness_hist}")
+
+res_sync = simulator.run_sync(student_params, student, fed,
+                              JETSON_FLEET_HMDB51, client_data)
+red = 1 - res.wall_clock_s / res_sync.wall_clock_s
+print(f"sync FL would take {res_sync.wall_clock_s/3600:.2f} h -> "
+      f"async reduces wall-clock by {100*red:.0f}% (paper: ~40%)")

@@ -1,0 +1,14 @@
+"""Batched serving example: prefill + decode across three architecture
+families (dense SWA, SSM, VLM-prefix) on this host.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import subprocess
+import sys
+
+for arch in ("h2o-danube-3-4b", "mamba2-130m", "paligemma-3b"):
+    print(f"\n=== {arch} ===")
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+         "--reduced", "--batch", "2", "--prompt-len", "16", "--gen", "8"],
+        check=True)

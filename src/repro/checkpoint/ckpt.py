@@ -1,0 +1,74 @@
+"""Pytree checkpointing: npz payload + JSON manifest (no external deps).
+
+Paths inside the pytree are flattened to '/'-joined keys. Server state
+(global epoch, update count, fed config echo) rides in the manifest.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _flatten(params) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_params(params, path: str, extra: dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(params)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    treedef = jax.tree_util.tree_structure(params)
+    manifest = {"treedef": str(treedef), "keys": sorted(flat),
+                "extra": extra or {}}
+    with open(_manifest_path(path), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def _manifest_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".json"
+
+
+def load_params(template, path: str):
+    """Restore into the structure of ``template`` (same treedef)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in paths:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = jnp.asarray(data[key])
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: checkpoint {arr.shape} != {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_server_state(state, path: str, fed=None):
+    extra = {"t": int(state.t), "total_updates": int(state.total_updates)}
+    if fed is not None:
+        extra["fed"] = {k: v for k, v in fed.__dict__.items()}
+    save_params(state.params, path, extra=extra)
+
+
+def load_server_state(template_params, path: str):
+    from repro.core.fedasync import ServerState
+    params = load_params(template_params, path)
+    with open(_manifest_path(path)) as f:
+        manifest = json.load(f)
+    extra = manifest["extra"]
+    return ServerState(params=params, t=extra["t"],
+                       total_updates=extra["total_updates"])

@@ -1,0 +1,75 @@
+"""Config registry: 10 assigned architectures + the paper's own 3-D ResNets.
+
+Every assigned config cites its source in ``source`` and matches the
+assignment sheet exactly. ``get_config(name)`` / ``list_archs()`` are the
+public API; ``SHAPES`` holds the 4 assigned input shapes.
+"""
+from __future__ import annotations
+
+from repro.types import ModelConfig, ShapeConfig
+
+from repro.configs.llama4_scout_17b_a16e import CONFIG as _llama4
+from repro.configs.grok_1_314b import CONFIG as _grok1
+from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
+from repro.configs.gemma3_12b import CONFIG as _gemma3
+from repro.configs.internlm2_20b import CONFIG as _internlm2
+from repro.configs.minitron_4b import CONFIG as _minitron
+from repro.configs.h2o_danube_3_4b import CONFIG as _danube
+from repro.configs.hymba_1_5b import CONFIG as _hymba
+from repro.configs.mamba2_130m import CONFIG as _mamba2
+from repro.configs.paligemma_3b import CONFIG as _paligemma
+from repro.configs.resnet3d import RESNET18, RESNET26, RESNET34
+
+_REGISTRY = {
+    c.name: c for c in (
+        _llama4, _grok1, _seamless, _gemma3, _internlm2,
+        _minitron, _danube, _hymba, _mamba2, _paligemma,
+        RESNET18, RESNET26, RESNET34,
+    )
+}
+
+# The 10 assigned architecture ids (order of the assignment sheet).
+ASSIGNED_ARCHS = (
+    "llama4-scout-17b-a16e",
+    "grok-1-314b",
+    "seamless-m4t-large-v2",
+    "gemma3-12b",
+    "internlm2-20b",
+    "minitron-4b",
+    "h2o-danube-3-4b",
+    "hymba-1.5b",
+    "mamba2-130m",
+    "paligemma-3b",
+)
+
+SHAPES = {
+    "train_4k":    ShapeConfig("train_4k",    seq_len=4_096,   global_batch=256, kind="train"),
+    "prefill_32k": ShapeConfig("prefill_32k", seq_len=32_768,  global_batch=32,  kind="prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  seq_len=32_768,  global_batch=128, kind="decode"),
+    "long_500k":   ShapeConfig("long_500k",   seq_len=524_288, global_batch=1,   kind="decode"),
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}") from None
+
+
+def list_archs() -> list[str]:
+    return list(ASSIGNED_ARCHS)
+
+
+def shape_supported(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether (arch, shape) is in the dry-run matrix; (ok, reason_if_not).
+
+    Mirrors DESIGN.md's skip list: long_500k needs sub-quadratic attention.
+    """
+    if cfg.family == "resnet3d":
+        if shape.kind != "train":
+            return False, "resnet3d: clip classifier, no autoregressive decode"
+        return True, ""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 500k decode skipped per DESIGN.md"
+    return True, ""

@@ -1,0 +1,8 @@
+# The paper's primary contribution: teacher->TA->student knowledge
+# distillation (distill.py) + asynchronous federated optimization with
+# staleness-adaptive mixing (fedasync.py), the synchronous FedAvg baseline
+# (fedavg.py), the heterogeneous-fleet event simulator (simulator.py) and
+# the convergence-bound evaluator (convergence.py).
+from repro.core import convergence, distill, fedasync, fedavg, simulator
+
+__all__ = ["distill", "fedasync", "fedavg", "simulator", "convergence"]

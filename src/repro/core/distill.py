@@ -1,0 +1,209 @@
+"""Knowledge distillation with teaching assistants (paper §III-B, §V-A).
+
+L = α·L_cls + (1-α)·L_KD, with L_KD the MSE between teacher and student
+logits (the paper's choice — *not* temperature-softened KL). In TA stages the
+classification targets are the teacher's hard predictions ("the ground truth
+[is] the output of the teacher for the input x").
+
+``run_chain`` executes the full teacher → TA* → student pipeline over any
+models in the registry; the hot loss is available both as pure jnp and as the
+fused Pallas kernel (kernels/kd_loss.py) via ``use_kernel=True``.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry
+from repro.models.common import cross_entropy
+from repro.optim import sgd
+from repro.types import DistillConfig, ModelConfig
+
+
+def kd_loss(student_logits, teacher_logits, labels, alpha: float,
+            use_kernel: bool = False):
+    """α·CE(student, labels) + (1-α)·MSE(student, teacher) (paper §III-B)."""
+    if use_kernel:
+        from repro.kernels import ops
+        return ops.kd_loss(student_logits, teacher_logits, labels, alpha)
+    s = student_logits.astype(jnp.float32)
+    t = teacher_logits.astype(jnp.float32)
+    l_kd = jnp.mean(jnp.sum(jnp.square(s - t), axis=-1))
+    l_cls = cross_entropy(s, labels)
+    return alpha * l_cls + (1.0 - alpha) * l_kd
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    sq = jax.tree_util.tree_map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), grads)
+    gn = jnp.sqrt(jax.tree_util.tree_reduce(jnp.add, sq, jnp.float32(0)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype),
+                                  grads)
+
+
+def make_distill_step(student_cfg: ModelConfig, dcfg: DistillConfig,
+                      use_kernel: bool = False,
+                      use_teacher_targets: bool = True,
+                      clip_norm: float = 1.0):
+    """Returns a jitted step: (params, opt_state, batch, teacher_logits) ->
+    (params, opt_state, loss). Teacher logits are *inputs* (precomputed by a
+    forward pass of the frozen teacher), matching the paper's pipeline where
+    KD cost = teacher fwd + student fwd/bwd. Gradients are clipped by global
+    norm (the raw MSE-on-logits term is scale-unbounded)."""
+    opt = sgd(dcfg.lr, dcfg.momentum, dcfg.weight_decay)
+
+    def loss_fn(params, batch, teacher_logits):
+        logits = registry.logits_fn(params, student_cfg, batch)
+        labels = batch["labels"]
+        if use_teacher_targets:
+            labels = jnp.argmax(teacher_logits, axis=-1)
+        return kd_loss(logits, teacher_logits, labels, dcfg.alpha,
+                       use_kernel=use_kernel)
+
+    @jax.jit
+    def step(params, opt_state, batch, teacher_logits):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch,
+                                                  teacher_logits)
+        if clip_norm:
+            grads = clip_by_global_norm(grads, clip_norm)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return step, opt
+
+
+def make_scratch_step(cfg: ModelConfig, dcfg: DistillConfig):
+    """Plain CE training step (the paper's 'train from scratch' baseline)."""
+    opt = sgd(dcfg.lr, dcfg.momentum, dcfg.weight_decay)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            return registry.loss_fn(p, cfg, batch, remat=False)[0]
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads = clip_by_global_norm(grads, 1.0)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return step, opt
+
+
+@dataclass
+class StageResult:
+    teacher: str
+    student: str
+    losses: list = field(default_factory=list)
+    accuracy: float = 0.0
+    wall_time_s: float = 0.0
+    flops_fwd_teacher: float = 0.0
+    flops_step_student: float = 0.0
+
+
+def evaluate(params, cfg: ModelConfig, batches) -> float:
+    """Top-1 accuracy over batches (per-clip for resnet3d)."""
+    hits = tot = 0
+    logits_j = jax.jit(functools.partial(registry.logits_fn, cfg=cfg))
+    for batch in batches:
+        logits = logits_j(params=params, batch=batch)
+        pred = jnp.argmax(logits, axis=-1)
+        hits += int(jnp.sum(pred == batch["labels"]))
+        tot += int(np.prod(batch["labels"].shape))
+    return hits / max(tot, 1)
+
+
+def run_chain(chain: Sequence[ModelConfig], dcfg: DistillConfig,
+              train_batches: Callable[[], list], eval_batches: list,
+              steps_per_stage: int, seed: int = 0,
+              teacher_params=None, use_kernel: bool = False,
+              trained_teacher_steps: int = 0):
+    """Run the teacher -> TA* -> student distillation chain.
+
+    chain[0] is the (pre-)trained teacher; each subsequent model distils from
+    the previous stage's result. Returns (final_params, [StageResult]).
+    """
+    key = jax.random.PRNGKey(seed)
+    results = []
+
+    # teacher: train from scratch if params not given (server-side pretrain)
+    tcfg = chain[0]
+    if teacher_params is None:
+        teacher_params = registry.init_params(key, tcfg)
+        if trained_teacher_steps:
+            step, opt = make_scratch_step(tcfg, dcfg)
+            st = opt.init(teacher_params)
+            for i, batch in zip(range(trained_teacher_steps),
+                                train_batches()):
+                teacher_params, st, _ = step(teacher_params, st, batch)
+
+    prev_params, prev_cfg = teacher_params, tcfg
+    for scfg in chain[1:]:
+        if scfg.vocab_size != prev_cfg.vocab_size and \
+                scfg.num_classes != prev_cfg.num_classes:
+            raise ValueError(
+                f"KD needs equal logit width: {prev_cfg.name} vs {scfg.name}")
+        key, sub = jax.random.split(key)
+        params = registry.init_params(sub, scfg)
+        step, opt = make_distill_step(scfg, dcfg, use_kernel=use_kernel)
+        opt_state = opt.init(params)
+        teacher_logits_j = jax.jit(
+            functools.partial(registry.logits_fn, cfg=prev_cfg))
+        res = StageResult(teacher=prev_cfg.name, student=scfg.name)
+        t0 = time.perf_counter()
+        for i, batch in zip(range(steps_per_stage), train_batches()):
+            t_logits = teacher_logits_j(params=prev_params, batch=batch)
+            params, opt_state, loss = step(params, opt_state, batch, t_logits)
+            res.losses.append(float(loss))
+        res.wall_time_s = time.perf_counter() - t0
+        res.accuracy = evaluate(params, scfg, eval_batches)
+        results.append(res)
+        prev_params, prev_cfg = params, scfg
+
+    return prev_params, results
+
+
+# ---------------------------------------------------------------------------
+# Analytic chain-time model (Table I/II reproduction at full scale)
+# ---------------------------------------------------------------------------
+
+def _fwd_flops_per_item(cfg: ModelConfig) -> float:
+    """Forward FLOPs per clip/token. CNNs reuse conv weights spatially, so
+    per-clip cost is 2*MACs, not 2*params."""
+    if cfg.family == "resnet3d":
+        from repro.models.resnet3d import macs_per_clip
+        return 2.0 * macs_per_clip(cfg)
+    return 2.0 * cfg.param_count()
+
+
+def stage_flops(teacher: ModelConfig, student: ModelConfig,
+                tokens_or_clips: float) -> float:
+    """FLOPs of one KD stage: teacher fwd + student fwd/bwd (3x fwd)."""
+    return (_fwd_flops_per_item(teacher) + 3 * _fwd_flops_per_item(student)) \
+        * tokens_or_clips
+
+
+def chain_time_model(chain: Sequence[ModelConfig], dataset_items: float,
+                     epochs: int, device_flops: float = 125e12,
+                     mfu: float = 0.15) -> dict:
+    # defaults model the paper's V100 server (125 TF/s tensor peak at a
+    # CNN-typical 15% utilization); pass 197e12/0.4 for TPU v5e estimates.
+    """Predicted wall time per stage and total (seconds).
+
+    Reproduces the *shape* of Table I (time grows sharply with more TAs
+    while accuracy saturates) and its order of magnitude.
+    """
+    out = {"stages": [], "total_s": 0.0}
+    for t, s in zip(chain[:-1], chain[1:]):
+        fl = stage_flops(t, s, dataset_items * epochs)
+        sec = fl / (device_flops * mfu)
+        out["stages"].append({"teacher": t.name, "student": s.name,
+                              "flops": fl, "seconds": sec})
+        out["total_s"] += sec
+    return out

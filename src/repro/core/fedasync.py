@@ -1,0 +1,117 @@
+"""Asynchronous federated optimization (paper Algorithm 1).
+
+Server: on receiving (w_new, τ) from any client at global epoch t,
+    β_t = β · s(t - τ),   s(x) = (1 + x)^{-a}        (paper §V-C)
+    w_t = (1 - β_t) · w_{t-1} + β_t · w_new
+
+Client k: from the received global (w_t, t), runs H ∈ [H_min, H_max] local
+SGD iterations on g_{w_t}(w; d) = l(w; d) + (θ/2)||w - w_t||².
+
+Both halves are jitted pure functions; the asynchronous event order is
+driven by core/simulator.py (or a real multi-pod launcher).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, replace
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry
+from repro.optim import apply_mask, proximal_grad, sgd, trainable_mask
+from repro.types import FedConfig, ModelConfig
+
+
+def staleness_fn(a: float) -> Callable:
+    """s(x) = (1+x)^{-a}; s(0)=1, monotonically decreasing (paper §IV-A)."""
+    def s(x):
+        return (1.0 + jnp.maximum(x, 0).astype(jnp.float32)) ** (-a)
+    return s
+
+
+def mixing_weight(fed: FedConfig, t, tau):
+    return fed.mixing_beta * staleness_fn(fed.staleness_a)(t - tau)
+
+
+@dataclass
+class ServerState:
+    params: Any
+    t: int = 0                 # global epoch counter
+    total_updates: int = 0
+
+
+def make_server_update(fed: FedConfig):
+    """Jitted mixing update: (w_{t-1}, w_new, β_t) -> w_t."""
+    @jax.jit
+    def mix(params, w_new, beta_t):
+        return jax.tree_util.tree_map(
+            lambda a, b: ((1.0 - beta_t) * a.astype(jnp.float32)
+                          + beta_t * b.astype(jnp.float32)).astype(a.dtype),
+            params, w_new)
+    return mix
+
+
+def server_receive(state: ServerState, w_new, tau: int, fed: FedConfig,
+                   mix=None) -> ServerState:
+    """One server step of Algorithm 1."""
+    if mix is None:
+        mix = make_server_update(fed)
+    # staleness = global updates applied since the client grabbed the model;
+    # s(0) = 1 when none intervened. Assumption 3 clamps at K.
+    staleness = min(max(state.t - tau, 0), fed.max_staleness)
+    beta_t = float(fed.mixing_beta
+                   * (1.0 + staleness) ** (-fed.staleness_a))
+    params = mix(state.params, w_new, jnp.float32(beta_t))
+    return ServerState(params=params, t=state.t + 1,
+                       total_updates=state.total_updates + 1)
+
+
+# ---------------------------------------------------------------------------
+# Client
+# ---------------------------------------------------------------------------
+
+def make_client_step(cfg: ModelConfig, fed: FedConfig, loss_kwargs=None):
+    """One proximal local SGD iteration, jitted.
+
+    (params, opt_state, anchor, batch) -> (params, opt_state, loss)
+    """
+    loss_kwargs = dict(loss_kwargs or {})
+    opt = sgd(fed.lr, fed.momentum, fed.weight_decay)
+
+    def task_loss(params, batch):
+        return registry.loss_fn(params, cfg, batch, **loss_kwargs)[0]
+
+    @jax.jit
+    def step(params, opt_state, anchor, batch, mask):
+        loss, grads = jax.value_and_grad(task_loss)(params, batch)
+        grads = proximal_grad(grads, params, anchor, fed.prox_theta)
+        grads = apply_mask(grads, mask)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return step, opt
+
+
+def client_update(params_global, t: int, batches, cfg: ModelConfig,
+                  fed: FedConfig, step=None, opt=None, mask=None,
+                  num_iters: int | None = None):
+    """Run H local iterations from the received global model.
+
+    ``batches`` is an iterable of local data batches (length >= H).
+    Returns (w_new, tau=t, losses).
+    """
+    if step is None:
+        step, opt = make_client_step(cfg, fed)
+    if mask is None:
+        mask = trainable_mask(params_global, fed.trainable)
+    params = params_global
+    anchor = params_global
+    opt_state = opt.init(params)
+    losses = []
+    H = num_iters if num_iters is not None else fed.local_iters_max
+    for i, batch in zip(range(H), batches):
+        params, opt_state, loss = step(params, opt_state, anchor, batch, mask)
+        losses.append(float(loss))
+    return params, t, losses

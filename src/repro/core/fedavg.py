@@ -1,0 +1,58 @@
+"""Synchronous FedAvg baseline (McMahan et al. [30]; paper baseline #2).
+
+Each round every client runs E_local epochs from the current global model;
+the server replaces the model with the data-size-weighted average. Wall
+clock per round = slowest client (the straggler penalty the async variant
+removes).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fedasync import make_client_step
+from repro.optim import trainable_mask
+from repro.types import FedConfig, ModelConfig
+
+
+@jax.jit
+def weighted_average(param_trees: Sequence, weights: jax.Array):
+    """weights normalized data sizes, shape (n_clients,)."""
+    def avg(*leaves):
+        stacked = jnp.stack([l.astype(jnp.float32) for l in leaves])
+        w = weights.reshape((-1,) + (1,) * (stacked.ndim - 1))
+        return jnp.sum(stacked * w, axis=0).astype(leaves[0].dtype)
+    return jax.tree_util.tree_map(avg, *param_trees)
+
+
+def fedavg_round(params_global, client_batches: Sequence, cfg: ModelConfig,
+                 fed: FedConfig, step=None, opt=None, mask=None,
+                 data_sizes: Sequence[int] | None = None):
+    """One synchronous round. client_batches: per-client iterable of batches.
+
+    Returns (new_global_params, per_client_losses).
+    """
+    if step is None:
+        step, opt = make_client_step(cfg, fed)
+    if mask is None:
+        mask = trainable_mask(params_global, fed.trainable)
+    results, losses = [], []
+    for batches in client_batches:
+        params = params_global
+        opt_state = opt.init(params)
+        cl = []
+        for i, batch in zip(range(fed.local_iters_max), batches):
+            params, opt_state, loss = step(params, opt_state, params_global,
+                                           batch, mask)
+            cl.append(float(loss))
+        results.append(params)
+        losses.append(cl)
+    n = len(results)
+    if data_sizes is None:
+        w = jnp.full((n,), 1.0 / n, jnp.float32)
+    else:
+        s = jnp.asarray(data_sizes, jnp.float32)
+        w = s / jnp.sum(s)
+    return weighted_average(results, w), losses

@@ -1,0 +1,166 @@
+"""Continuous-batching serving loop (slot-based, iteration-level admission).
+
+The paper's deployment target is per-device inference (Table V); a real
+fleet serves *streams* of requests. This scheduler keeps a fixed pool of
+decode slots; each slot holds one request's KV/SSM state and its own
+position counter. New requests are admitted the moment a slot frees
+(iteration-level scheduling) rather than waiting for a whole batch wave.
+
+Per-slot positions come from ``jax.vmap`` over the batch dim of the
+existing single-stream ``decode_step`` — every family (dense / SWA / MoE /
+SSM / hybrid / VLM) works unchanged, and greedy outputs are bit-identical
+to running each request alone (tested).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry
+from repro.types import ModelConfig
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (P,) int32
+    max_new: int
+    eos_id: Optional[int] = None
+    out: list = field(default_factory=list)
+    slot: int = -1
+
+    @property
+    def done(self) -> bool:
+        if len(self.out) >= self.max_new:
+            return True
+        return bool(self.out) and self.eos_id is not None \
+            and self.out[-1] == self.eos_id
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batching for any LM-family architecture."""
+
+    def __init__(self, params, cfg: ModelConfig, max_slots: int = 4,
+                 max_len: int = 256, dtype=jnp.float32):
+        if cfg.is_encdec or cfg.family == "resnet3d":
+            raise ValueError(f"{cfg.family}: not a decoder-only server")
+        self.params, self.cfg = params, cfg
+        self.max_slots, self.max_len = max_slots, max_len
+        self.cache = registry.init_cache(cfg, max_slots, max_len, dtype)
+        self.pos = np.zeros(max_slots, np.int32)        # next position
+        self.last_tok = np.zeros(max_slots, np.int32)
+        self.active: list[Optional[Request]] = [None] * max_slots
+        self.queue: list[Request] = []
+        self.completed: list[Request] = []
+        self._rid = itertools.count()
+        self._steps = 0
+
+        # one vmapped decode: per-slot token + per-slot position. vmap
+        # consumes the cache's batch dim (in_axes=1); decode_step expects an
+        # explicit batch dim, so re-insert a size-1 one inside.
+        def one(params, token, cache, pos):
+            cache = jax.tree_util.tree_map(
+                lambda a: jnp.expand_dims(a, 1), cache)
+            logits, cache = registry.decode_step(params, cfg, token[None],
+                                                 cache, pos)
+            cache = jax.tree_util.tree_map(lambda a: a[:, 0], cache)
+            return logits, cache
+
+        self._decode = jax.jit(jax.vmap(
+            one, in_axes=(None, 0, 1, 0), out_axes=(0, 1)))
+        self._prefill = jax.jit(
+            lambda params, batch, cache: registry.prefill(
+                params, cfg, batch, cache, q_chunk=64))
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new: int = 16, eos_id=None) -> int:
+        req = Request(next(self._rid), np.asarray(prompt, np.int32),
+                      max_new, eos_id)
+        self.queue.append(req)
+        return req.rid
+
+    def _admit(self):
+        for slot in range(self.max_slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            req.slot = slot
+            P = len(req.prompt)
+            assert P + req.max_new <= self.max_len, "request too long"
+            # prefill this request alone (B=1) and install into the slot
+            c1 = registry.init_cache(self.cfg, 1, self.max_len,
+                                     jax.tree_util.tree_leaves(
+                                         self.cache)[0].dtype)
+            logits, c1 = self._prefill(
+                self.params, {"tokens": jnp.asarray(req.prompt[None])}, c1)
+            self.cache = jax.tree_util.tree_map(
+                lambda full, one: full.at[:, slot].set(one[:, 0]),
+                self.cache, c1)
+            nxt = int(jnp.argmax(logits, axis=-1)[0])
+            req.out.append(nxt)
+            self.pos[slot] = P + self.cfg.prefix_len
+            self.last_tok[slot] = nxt
+            self.active[slot] = req
+
+    def _retire(self):
+        for slot, req in enumerate(self.active):
+            if req is not None and req.done:
+                self.completed.append(req)
+                self.active[slot] = None
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One scheduler iteration: retire, admit, batched decode.
+        Returns the number of active slots that decoded."""
+        self._retire()
+        self._admit()
+        mask = np.array([r is not None for r in self.active])
+        if not mask.any():
+            return 0
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(self.last_tok), self.cache,
+            jnp.asarray(self.pos))
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out.append(int(nxt[slot]))
+            self.pos[slot] += 1
+            self.last_tok[slot] = nxt[slot]
+        self._steps += 1
+        return int(mask.sum())
+
+    def run(self, max_iters: int = 10_000) -> list:
+        """Drive until queue + slots drain; returns completed requests."""
+        for _ in range(max_iters):
+            if not self.queue and all(r is None for r in self.active):
+                break
+            if self.step() == 0 and not self.queue:
+                break
+            self._retire()
+        self._retire()
+        return sorted(self.completed, key=lambda r: r.rid)
+
+
+def generate_single(params, cfg: ModelConfig, prompt, max_new: int,
+                    max_len: int = 256, dtype=jnp.float32) -> list:
+    """Reference single-request greedy generation (parity oracle)."""
+    cache = registry.init_cache(cfg, 1, max_len, dtype)
+    logits, cache = registry.prefill(
+        params, cfg, {"tokens": jnp.asarray(np.asarray(prompt)[None],
+                                            jnp.int32)}, cache, q_chunk=64)
+    out = [int(jnp.argmax(logits, axis=-1)[0])]
+    pos = len(prompt) + cfg.prefix_len
+    for _ in range(max_new - 1):
+        logits, cache = registry.decode_step(
+            params, cfg, jnp.asarray([out[-1]], jnp.int32), cache,
+            jnp.int32(pos))
+        out.append(int(jnp.argmax(logits, axis=-1)[0]))
+        pos += 1
+    return out

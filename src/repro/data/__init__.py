@@ -1,0 +1,7 @@
+from repro.data.synthetic import (SyntheticActionDataset, SyntheticLMDataset,
+                                  make_dataset_for)
+from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.loader import BatchLoader
+
+__all__ = ["SyntheticActionDataset", "SyntheticLMDataset", "make_dataset_for",
+           "iid_partition", "dirichlet_partition", "BatchLoader"]

@@ -1,0 +1,26 @@
+"""Minimal batching utilities shared by the trainer and the simulator."""
+from __future__ import annotations
+
+from typing import Callable, Iterator
+
+import numpy as np
+
+
+class BatchLoader:
+    """Re-startable loader: calling it returns a fresh finite iterator,
+    which is exactly the `client_data[k]()` contract of the simulator."""
+
+    def __init__(self, dataset, batch_size: int, steps: int,
+                 seed: int = 0, indices: np.ndarray | None = None):
+        self.dataset = dataset
+        self.batch_size = batch_size
+        self.steps = steps
+        self.seed = seed
+        self.indices = indices
+        self._epoch = 0
+
+    def __call__(self) -> Iterator[dict]:
+        self._epoch += 1
+        return self.dataset.batches(self.batch_size, self.steps,
+                                    seed=(self.seed, self._epoch),
+                                    indices=self.indices)

@@ -1,0 +1,30 @@
+"""Federated data partitioning: IID and Dirichlet non-IID splits.
+
+The paper distributes HMDB51/UCF101 evenly (≈500MB / 1.73GB per client);
+non-IID Dirichlet splits support the future-work axis the paper names.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def iid_partition(num_items: int, num_clients: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(num_items)
+    return [np.sort(s) for s in np.array_split(perm, num_clients)]
+
+
+def dirichlet_partition(labels: np.ndarray, num_clients: int,
+                        alpha: float = 0.5, seed: int = 0):
+    """Class-skewed split; alpha→∞ recovers IID, alpha→0 one-class clients."""
+    rng = np.random.default_rng(seed)
+    classes = np.unique(labels)
+    shards: list[list[int]] = [[] for _ in range(num_clients)]
+    for c in classes:
+        idx = np.where(labels == c)[0]
+        rng.shuffle(idx)
+        props = rng.dirichlet(np.full(num_clients, alpha))
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for k, part in enumerate(np.split(idx, cuts)):
+            shards[k].extend(part.tolist())
+    return [np.sort(np.array(s, dtype=np.int64)) for s in shards]

@@ -1,0 +1,129 @@
+"""Synthetic datasets standing in for Kinetics / HMDB51 / UCF101.
+
+The repro gate (DESIGN.md): the real video datasets (400 GB) and the Jetson
+testbed are unavailable, and the paper's claims are about *relative*
+behaviour (KD > scratch, async ≈ sync accuracy at lower wall-clock). The
+synthetic action dataset is constructed so those relative effects are
+reproducible:
+
+- each class c has a latent "motion program" (direction, speed, texture seed)
+  rendering short clips of a moving Gaussian blob over structured noise;
+- class manifolds overlap (configurable noise) so a large teacher separates
+  them better than a small student trained from scratch on few samples —
+  the regime where KD transfers dark knowledge;
+- a "small" dataset (HMDB51 stand-in) is a low-sample, higher-noise split
+  and a "large" one (Kinetics stand-in) has many samples per class.
+
+The LM dataset is an order-k Markov chain over a small vocab for the
+transformer-family architectures (used by FL integration tests).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclass
+class SyntheticActionDataset:
+    """Procedural video-clip classification."""
+    num_classes: int
+    samples_per_class: int
+    frames: int = 4
+    size: int = 16
+    noise: float = 0.35
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        C = self.num_classes
+        # latent motion programs
+        self.dirs = rng.normal(size=(C, 2))
+        self.dirs /= np.linalg.norm(self.dirs, axis=1, keepdims=True) + 1e-9
+        self.speeds = rng.uniform(0.5, 2.5, size=(C,))
+        self.widths = rng.uniform(1.5, 3.5, size=(C,))
+        self.textures = rng.normal(size=(C, self.size, self.size, 3)) * 0.3
+
+    def __len__(self):
+        return self.num_classes * self.samples_per_class
+
+    def render(self, cls: int, rng: np.random.Generator) -> np.ndarray:
+        T, S = self.frames, self.size
+        yy, xx = np.mgrid[0:S, 0:S].astype(np.float32)
+        start = rng.uniform(S * 0.25, S * 0.75, size=(2,))
+        clip = np.empty((T, S, S, 3), np.float32)
+        d = self.dirs[cls] + rng.normal(scale=0.15, size=2)
+        sp = self.speeds[cls] * rng.uniform(0.8, 1.2)
+        w = self.widths[cls]
+        for t in range(T):
+            cx, cy = start + d * sp * t
+            blob = np.exp(-(((xx - cx) % S) ** 2 + ((yy - cy) % S) ** 2)
+                          / (2 * w * w))
+            frame = blob[..., None] + self.textures[cls]
+            clip[t] = frame
+        clip += rng.normal(scale=self.noise, size=clip.shape)
+        return clip
+
+    def batches(self, batch_size: int, steps: int, seed: int = 0,
+                indices: np.ndarray | None = None):
+        """Yields dicts {clips, labels}. ``indices`` restricts to a client
+        shard (see partition.py)."""
+        rng = np.random.default_rng((self.seed, seed))
+        n = len(self) if indices is None else len(indices)
+        for _ in range(steps):
+            if indices is None:
+                labels = rng.integers(0, self.num_classes, size=batch_size)
+            else:
+                pick = rng.integers(0, n, size=batch_size)
+                labels = (indices[pick] % self.num_classes).astype(np.int64)
+            clips = np.stack([self.render(int(c), rng) for c in labels])
+            yield {"clips": clips.astype(np.float32),
+                   "labels": labels.astype(np.int32)}
+
+
+@dataclass
+class SyntheticLMDataset:
+    """Order-1 Markov chain token stream with class-like modes."""
+    vocab: int
+    seq_len: int
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        raw = rng.dirichlet(np.full(self.vocab, 0.05), size=self.vocab)
+        self.T = raw / raw.sum(axis=1, keepdims=True)
+
+    def sample(self, rng: np.random.Generator, batch: int) -> np.ndarray:
+        out = np.empty((batch, self.seq_len + 1), np.int64)
+        out[:, 0] = rng.integers(0, self.vocab, size=batch)
+        for i in range(self.seq_len):
+            probs = self.T[out[:, i]]
+            cum = probs.cumsum(axis=1)
+            u = rng.random((batch, 1))
+            out[:, i + 1] = (u > cum).sum(axis=1)
+        return out
+
+    def batches(self, batch_size: int, steps: int, seed: int = 0,
+                indices=None):
+        rng = np.random.default_rng((self.seed, seed))
+        for _ in range(steps):
+            toks = self.sample(rng, batch_size)
+            yield {"tokens": toks[:, :-1].astype(np.int32),
+                   "labels": toks[:, 1:].astype(np.int32)}
+
+
+def make_dataset_for(cfg, *, small: bool = True, seed: int = 0):
+    """Dataset stand-in appropriate for a model family.
+
+    small=True  -> HMDB51-like (few samples, noisy; clients' fine-tune data)
+    small=False -> Kinetics-like (many samples; server-side distillation)
+    """
+    if cfg.family == "resnet3d":
+        return SyntheticActionDataset(
+            num_classes=min(cfg.num_classes, 16 if small else 32),
+            samples_per_class=8 if small else 64,
+            noise=0.5 if small else 0.3,
+            seed=seed)
+    return SyntheticLMDataset(vocab=cfg.vocab_size,
+                              seq_len=64, seed=seed)

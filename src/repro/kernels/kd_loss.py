@@ -1,0 +1,109 @@
+"""Fused KD-loss Pallas TPU kernel: α·CE(student, labels) + (1-α)·Σ(s-t)².
+
+Motivation (DESIGN.md §3): the KD tail is memory-bound — a naive
+implementation reads the student logits for max, exp-sum, gather and the
+squared error separately, and reads the teacher logits twice. This kernel
+streams both logit tensors through VMEM exactly once, carrying the online
+logsumexp (m, l), the gathered gold logit, and the running squared error in
+VMEM scratch across vocab tiles.
+
+Grid = (row_blocks, vocab_tiles); the vocab tile index is innermost so the
+scratch accumulators live across the sweep of one row block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(s_ref, t_ref, lab_ref, out_ref,
+            m_ref, l_ref, gold_ref, sq_ref,
+            *, alpha: float, vb: int, num_vt: int, vocab: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        gold_ref[...] = jnp.zeros_like(gold_ref)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    s = s_ref[...].astype(jnp.float32)              # (rb, vb)
+    t = t_ref[...].astype(jnp.float32)
+    lab = lab_ref[...]                              # (rb,)
+    rb = s.shape[0]
+
+    # mask out padding columns of the last tile
+    col = j * vb + jax.lax.broadcasted_iota(jnp.int32, (rb, vb), 1)
+    valid = col < vocab
+    s_m = jnp.where(valid, s, -1e30)
+
+    # online logsumexp
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s_m, axis=-1))
+    l_ref[...] = l_ref[...] * jnp.exp(m_prev - m_new) \
+        + jnp.sum(jnp.where(valid, jnp.exp(s_m - m_new[:, None]), 0.0),
+                  axis=-1)
+    m_ref[...] = m_new
+
+    # gold logit gather (label may fall in this tile)
+    hit = col == lab[:, None]
+    gold_ref[...] += jnp.sum(jnp.where(hit, s, 0.0), axis=-1)
+
+    # running squared error (zero on padding)
+    diff = jnp.where(valid, s - t, 0.0)
+    sq_ref[...] += jnp.sum(diff * diff, axis=-1)
+
+    @pl.when(j == num_vt - 1)
+    def _done():
+        ce = jnp.log(l_ref[...]) + m_ref[...] - gold_ref[...]
+        out_ref[...] = alpha * ce + (1.0 - alpha) * sq_ref[...]
+
+
+def kd_loss_pallas(student_logits, teacher_logits, labels, alpha: float,
+                   row_block: int = 8, vocab_block: int = 512,
+                   interpret: bool = True):
+    """Per-row fused loss. student/teacher: (R, V); labels (R,) int32.
+
+    Returns (R,) float32. Rows are padded to row_block; vocab tiles are
+    masked in-kernel so any (R, V) works.
+    """
+    R, V = student_logits.shape
+    rb = min(row_block, R)
+    pad_r = (-R) % rb
+    if pad_r:
+        student_logits = jnp.pad(student_logits, ((0, pad_r), (0, 0)))
+        teacher_logits = jnp.pad(teacher_logits, ((0, pad_r), (0, 0)))
+        labels = jnp.pad(labels, (0, pad_r))
+    Rp = R + pad_r
+    vb = min(vocab_block, V)
+    num_vt = pl.cdiv(V, vb)
+    pad_v = num_vt * vb - V
+    if pad_v:
+        student_logits = jnp.pad(student_logits, ((0, 0), (0, pad_v)))
+        teacher_logits = jnp.pad(teacher_logits, ((0, 0), (0, pad_v)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, alpha=float(alpha), vb=vb,
+                          num_vt=num_vt, vocab=V),
+        grid=(Rp // rb, num_vt),
+        in_specs=[
+            pl.BlockSpec((rb, vb), lambda i, j: (i, j)),
+            pl.BlockSpec((rb, vb), lambda i, j: (i, j)),
+            pl.BlockSpec((rb,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((rb,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Rp,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((rb,), jnp.float32),   # running max m
+            pltpu.VMEM((rb,), jnp.float32),   # running sumexp l
+            pltpu.VMEM((rb,), jnp.float32),   # gold logit
+            pltpu.VMEM((rb,), jnp.float32),   # running Σ(s-t)²
+        ],
+        interpret=interpret,
+    )(student_logits, teacher_logits, labels)
+    return out[:R]

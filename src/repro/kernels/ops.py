@@ -1,0 +1,63 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container kernels run with interpret=True (Pallas executes the
+kernel body in Python, validating the exact TPU program); on a real TPU
+backend set REPRO_PALLAS_INTERPRET=0 (or rely on the auto-detect) to lower
+to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.kd_loss import kd_loss_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.kernels.swa_attention import swa_attention_pallas
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("alpha",))
+def kd_loss(student_logits, teacher_logits, labels, alpha: float):
+    """Mean fused KD loss over all rows (α·CE + (1-α)·Σ(s-t)²)."""
+    R = 1
+    for dim in student_logits.shape[:-1]:
+        R *= dim
+    V = student_logits.shape[-1]
+    per_row = kd_loss_pallas(student_logits.reshape(R, V),
+                             teacher_logits.reshape(R, V),
+                             labels.reshape(R), alpha,
+                             interpret=_interpret())
+    return jnp.mean(per_row)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "causal"))
+def swa_attention(q, k, v, window: int, causal: bool = True):
+    """(BH, S, D) sliding-window flash attention; window=0 -> full."""
+    S = q.shape[1]
+    w = window if window > 0 else S
+    return swa_attention_pallas(q, k, v, w, causal=causal,
+                                q_block=min(128, S), k_block=min(128, S),
+                                interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 128):
+    """Mamba2 SSD layer core. See ssd_scan_pallas."""
+    return ssd_scan_pallas(x, dt, A, Bm, Cm, chunk,
+                           interpret=_interpret())
+
+
+# re-export oracles for convenience
+kd_loss_ref = ref.kd_loss_ref
+swa_attention_ref = ref.swa_attention_ref
+ssd_scan_ref = ref.ssd_scan_ref

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kd_loss_ref(student_logits, teacher_logits, labels, alpha: float):
+    """Per-row fused KD loss: α·CE + (1-α)·Σ(s-t)² . Rows = flattened batch.
+
+    student/teacher: (R, V); labels: (R,) int32. Returns (R,) float32.
+    """
+    s = student_logits.astype(jnp.float32)
+    t = teacher_logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(s, axis=-1)
+    gold = jnp.take_along_axis(s, labels[:, None], axis=-1)[:, 0]
+    ce = lse - gold
+    sq = jnp.sum(jnp.square(s - t), axis=-1)
+    return alpha * ce + (1.0 - alpha) * sq
+
+
+def swa_attention_ref(q, k, v, window: int, causal: bool = True):
+    """Sliding-window attention oracle. q,k,v: (BH, S, D); window>0 = #keys
+    each query may see (its own position included). Returns (BH, S, D)."""
+    BH, S, D = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    ok = (qi - ki < window) & (qi - ki >= 0) if causal else \
+        (jnp.abs(qi - ki) < window)
+    s = jnp.where(ok[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, chunk: int):
+    """Mamba2 SSD oracle — delegates to the model's chunked implementation
+    (itself validated against a naive sequential recurrence in tests).
+
+    x: (B,S,H,P), dt: (B,S,H) (already softplus'ed), A: (H,),
+    Bm/Cm: (B,S,N). Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(x, dt, A, Bm, Cm, chunk)
+
+
+def ssd_sequential_ref(x, dt, A, Bm, Cm):
+    """Naive O(S) recurrence — the *independent* ground truth for SSD.
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t · x_t ⊗ B_t ;  y_t = C_t · h_t
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        dA = jnp.exp(dtt * A[None, :])                       # (B,H)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, bt)
+        h = h * dA[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bm.transpose(1, 0, 2).astype(jnp.float32),
+          Cm.transpose(1, 0, 2).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h.astype(x.dtype)

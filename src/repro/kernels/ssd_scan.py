@@ -1,0 +1,112 @@
+"""Mamba2 SSD chunk-scan Pallas TPU kernel.
+
+One kernel does the whole SSD layer for a (batch·head) slice: the grid is
+(BH, num_chunks) with the chunk index innermost, so the inter-chunk state
+h (P, N) lives in VMEM scratch and is carried across the sequential grid
+sweep — the TPU-native replacement for the GPU version's separate
+intra-chunk GEMM kernel + inter-chunk scan kernel (no HBM round-trip for
+the states).
+
+Per chunk (Q = chunk length):
+  dA   = dt ⊙ A                 (Q,)
+  L    = exp(segsum(dA))        (Q, Q) lower-tri decay
+  Yin  = ((C Bᵀ) ⊙ L) (x·dt)    intra-chunk
+  Yout = (C hᵀ) ⊙ exp(cumsum dA)  inter-chunk read
+  h    = exp(Σ dA) · h + Σ_q dt_q·decay_q·(x_q ⊗ B_q)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref,
+            *, nchunks: int, Q: int):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)       # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)     # (Q,)
+    A = a_ref[0].astype(jnp.float32)          # scalar
+    Bm = b_ref[0, 0].astype(jnp.float32)      # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)      # (Q, N)
+
+    dA = dt * A                               # (Q,) negative
+    cum = jnp.cumsum(dA)                      # (Q,)
+
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j
+    seg = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(tri, jnp.exp(seg), 0.0)
+    scores = (Cm @ Bm.T) * L                  # (Q, Q)
+    xdt = x * dt[:, None]
+    y = scores @ xdt                          # (Q, P)
+
+    # inter-chunk read from carried state
+    h = h_ref[...]                            # (P, N)
+    y += jnp.exp(cum)[:, None] * (Cm @ h.T)
+
+    # state update
+    decay_states = jnp.exp(cum[-1] - cum)     # (Q,)
+    upd = (xdt * decay_states[:, None]).T @ Bm     # (P, N)
+    h_ref[...] = h * jnp.exp(cum[-1]) + upd
+
+    y_ref[0, 0, ...] = y.astype(y_ref.dtype)
+
+    @pl.when(c_idx == nchunks - 1)
+    def _done():
+        hout_ref[0, ...] = h_ref[...].astype(hout_ref.dtype)
+
+
+def ssd_scan_pallas(x, dt, A, Bm, Cm, chunk: int, interpret: bool = True):
+    """x: (B,S,H,P), dt: (B,S,H) (softplus'ed), A: (H,), Bm/Cm: (B,S,N).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)). Matches
+    ref.ssd_scan_ref / models.ssm.ssd_chunked.
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    BH = B * H
+
+    # fold (B, H) and broadcast the shared B/C across heads
+    xf = x.transpose(0, 2, 1, 3).reshape(BH, nc, Q, P)
+    dtf = dt.transpose(0, 2, 1).reshape(BH, nc, Q)
+    af = jnp.broadcast_to(A[None, :], (B, H)).reshape(BH)
+    bf = jnp.broadcast_to(Bm[:, None], (B, H, S, N)).reshape(BH, nc, Q, N)
+    cf = jnp.broadcast_to(Cm[:, None], (B, H, S, N)).reshape(BH, nc, Q, N)
+
+    y, hout = pl.pallas_call(
+        functools.partial(_kernel, nchunks=nc, Q=Q),
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1,), lambda b, c: (b,)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, P, N), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, nc, Q, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, P, N), x.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, af, bf, cf)
+
+    y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    return y, hout.reshape(B, H, P, N)

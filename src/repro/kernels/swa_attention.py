@@ -1,0 +1,121 @@
+"""Sliding-window flash attention Pallas TPU kernel.
+
+TPU adaptation of the paper-adjacent GPU flash pattern: online-softmax
+accumulation over KV tiles with *structural* block skipping — for window w
+and query block qi, only ceil((w + qb)/kb) + 1 KV tiles can intersect the
+band, so the grid's KV dimension is that count and the BlockSpec index_map
+selects which physical tile each grid step loads (clamped at the sequence
+edges; out-of-band positions are masked in-kernel using the recomputed
+physical tile index). Full attention is the same kernel with w = S.
+
+Layout: q, k, v are (BH, S, D) — heads pre-folded, GQA expansion done in
+ops.py. MXU-aligned D (64/128/256); block sizes default 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kv_block_index(qi, kj, *, qb, kb, nkv_grid, nk_max):
+    """Physical KV tile for grid step (qi, kj): the last needed tile is the
+    one containing this q block's end; earlier grid steps walk back."""
+    last = (qi * qb + qb - 1) // kb
+    idx = last - (nkv_grid - 1) + kj
+    return jnp.clip(idx, 0, nk_max - 1)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, qb, kb, window, causal, nkv_grid, nk_max, seq_len, scale):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                 # (qb, D)
+    k = k_ref[0].astype(jnp.float32)                 # (kb, D)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = (q @ k.T) * scale                            # (qb, kb)
+
+    # positions from the *physical* tile this grid step loaded
+    blk = _kv_block_index(qi, kj, qb=qb, kb=kb, nkv_grid=nkv_grid,
+                          nk_max=nk_max)
+    q_pos = qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 0)
+    k_pos = blk * kb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+    d = q_pos - k_pos
+    ok = (d < window) & (k_pos < seq_len)
+    if causal:
+        ok &= d >= 0
+    else:
+        ok &= d > -window
+    # duplicate-tile guard: edge clamping makes early grid steps re-load
+    # physical tile 0; only the unclamped owner contributes (own == blk).
+    last = (qi * qb + qb - 1) // kb
+    own = last - (nkv_grid - 1) + kj
+    ok &= own == blk
+
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(ok, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(kj == nkv_grid - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def swa_attention_pallas(q, k, v, window: int, causal: bool = True,
+                         q_block: int = 128, k_block: int = 128,
+                         interpret: bool = True):
+    """q,k,v: (BH, S, D) -> (BH, S, D). window>0; use window=S for full."""
+    BH, S, D = q.shape
+    qb = min(q_block, S)
+    kb = min(k_block, S)
+    assert S % qb == 0 and S % kb == 0, (S, qb, kb)
+    nk_max = S // kb
+    nkv_grid = min(nk_max, (window + qb - 1) // kb + 1 + (0 if causal else
+                                                          (window - 1) // kb + 1))
+
+    grid = (BH, S // qb, nkv_grid)
+    kv_map = functools.partial(_kv_block_index, qb=qb, kb=kb,
+                               nkv_grid=nkv_grid, nk_max=nk_max)
+    out = pl.pallas_call(
+        functools.partial(_kernel, qb=qb, kb=kb, window=window,
+                          causal=causal, nkv_grid=nkv_grid, nk_max=nk_max,
+                          seq_len=S, scale=D ** -0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, qb, D), lambda b, qi, kj: (b, qi, 0)),
+            pl.BlockSpec((1, kb, D),
+                         lambda b, qi, kj: (b, kv_map(qi, kj), 0)),
+            pl.BlockSpec((1, kb, D),
+                         lambda b, qi, kj: (b, kv_map(qi, kj), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, D), lambda b, qi, kj: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,343 @@
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, print memory/cost analysis, and write the roofline
+JSON artifacts EXPERIMENTS.md reads.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-12b \
+        --shape train_4k --mesh pod                              # one combo
+    PYTHONPATH=src python -m repro.launch.dryrun --list          # the matrix
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: the dry-run builds the 256/512-chip
+# production meshes out of host placeholder devices. Never set globally.
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, shape_supported
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.roofline import analyze_compiled
+from repro.sharding import specs as shspecs
+from repro.types import FedConfig
+
+PARAM_DTYPE = jnp.float32      # master weights (SGD momentum rides f32)
+ACT_DTYPE = jnp.bfloat16
+OUT_DIR = "experiments/dryrun"
+
+
+def params_struct(cfg, dtype=PARAM_DTYPE):
+    return jax.eval_shape(
+        lambda: registry.init_params(jax.random.PRNGKey(0), cfg, dtype))
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D (train) or 2·N_active·D (forward-only decode/prefill)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n * toks
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # one token per sequence
+
+
+def lower_combo(arch: str, shape_name: str, mesh, mesh_name: str,
+                fed: FedConfig, constrain_acts: bool = True,
+                opts: dict | None = None):
+    """opts (all default off — the paper-faithful/naive BASELINE):
+      param_dtype: 'f32'|'bf16'  — bf16 master weights (train/prefill)
+      prefill_act: bool          — residual seq-sharding during prefill
+                                   (pure collective overhead fwd-only;
+                                   True in the baseline)
+      serve_unroll: bool         — python-unroll decode layers
+      window_slice: bool         — SWA layers read only their window of
+                                   the cache (requires serve_unroll)
+      moe_fullgrid_dispatch: bool — shard_map MoE dispatch over
+                                   (data×model) instead of data
+    """
+    opts = dict(opts or {})
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    chips = mesh.devices.size
+    pdtype = jnp.bfloat16 if opts.get("param_dtype") == "bf16" \
+        else PARAM_DTYPE
+
+    with mesh:
+        if shape.kind in ("train", "prefill"):
+            # prefill is lowered as the forward-only half of the same program
+            pstruct = params_struct(cfg, pdtype)
+            bstruct = registry.batch_spec(cfg, shape, ACT_DTYPE)
+            if shape.kind == "train":
+                tkw = {}
+                if opts.get("q_chunk"):
+                    tkw["q_chunk"] = int(opts["q_chunk"])
+                if opts.get("loss_chunk"):
+                    tkw["loss_chunk"] = int(opts["loss_chunk"])
+                jf, _ = steps_mod.jit_train_step(
+                    cfg, fed, mesh, shape, pstruct, bstruct,
+                    constrain_acts=constrain_acts, donate=True,
+                    moe_fullgrid=opts.get("moe_fullgrid_dispatch", False),
+                    train_kwargs=tkw)
+                opt_struct = jax.eval_shape(
+                    steps_mod.sgd(fed.lr, fed.momentum).init, pstruct)
+                lowered = jf.lower(pstruct, opt_struct, pstruct, bstruct)
+            else:
+                pspec = shspecs.param_pspecs(mesh, cfg, pstruct)
+                bspec = shspecs.batch_pspecs(mesh, cfg, bstruct)
+                use_act = opts.get("prefill_act", True) and constrain_acts
+                ap = steps_mod.act_pspec(mesh, cfg, shape.seq_len) \
+                    if use_act else None
+                kw = {}
+                if cfg.moe is not None and opts.get("moe_shardmap", True):
+                    dp = shspecs.data_axes(mesh)
+                    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+                    if opts.get("moe_fullgrid_dispatch"):
+                        dp = tuple(shspecs.data_axes(mesh)) + ("model",)
+                    kw["moe_ctx"] = {"mesh": mesh, "dp": dp}
+
+                def fwd(params, batch):
+                    return registry.loss_fn(params, cfg, batch, remat=False,
+                                            act_pspec=ap, dtype=ACT_DTYPE,
+                                            **kw)[0]
+
+                jf = jax.jit(fwd,
+                             in_shardings=shspecs.named(mesh, (pspec, bspec)),
+                             out_shardings=shspecs.named(mesh, P()))
+                lowered = jf.lower(pstruct, bstruct)
+        else:
+            pstruct = params_struct(cfg, ACT_DTYPE)   # serving: bf16 weights
+            ring = opts.get("ring_cache", False) and \
+                cfg.family in ("dense", "moe", "hybrid", "vlm", "ssm") and \
+                cfg.sliding_window > 0
+            if ring:
+                from repro.models import lm as lm_mod
+                cstruct = jax.eval_shape(
+                    lambda: lm_mod.init_ring_cache(cfg, shape.global_batch,
+                                                   shape.seq_len, ACT_DTYPE))
+            else:
+                cstruct = jax.eval_shape(
+                    lambda: registry.init_cache(cfg, shape.global_batch,
+                                                shape.seq_len, ACT_DTYPE))
+            jf, _ = steps_mod.jit_serve_step(
+                cfg, mesh, shape, pstruct, cstruct, donate=True,
+                unroll=opts.get("serve_unroll", False),
+                window_slice=opts.get("window_slice", False), ring=ring)
+            tok = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+            lowered = jf.lower(pstruct, tok, cstruct,
+                               jax.ShapeDtypeStruct((), jnp.int32))
+
+        compiled = lowered.compile()
+
+    rep = analyze_compiled(
+        compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+        chips=chips, model_flops_global=model_flops(cfg, shape))
+    return compiled, rep
+
+
+def lower_fl_aggregation(arch: str, mesh, mesh_name: str, fed: FedConfig,
+                         beta_t: float = 0.7):
+    """Lower the paper's server-side programs on the production mesh:
+
+    1. the async mixing update w_t = (1-β_t)·w_{t-1} + β_t·w_new
+       (Algorithm 1 server line) over FSDP×tensor-sharded parameters;
+    2. synchronous FedAvg across the pod axis — per-pod client models
+       stacked on a leading dim sharded over 'pod', mean lowers to a
+       cross-pod all-reduce (the straggler-barrier collective the paper's
+       async design removes).
+    """
+    cfg = get_config(arch)
+    chips = mesh.devices.size
+    pstruct = params_struct(cfg)
+    results = {}
+    with mesh:
+        pspec = shspecs.param_pspecs(mesh, cfg, pstruct)
+        mix = steps_mod.mixing_step(beta_t)
+        jf = jax.jit(mix, in_shardings=shspecs.named(mesh, (pspec, pspec)),
+                     out_shardings=shspecs.named(mesh, pspec),
+                     donate_argnums=(0,))
+        comp = jf.lower(pstruct, pstruct).compile()
+        results["mixing"] = analyze_compiled(
+            comp, arch=arch, shape="mixing_update", mesh_name=mesh_name,
+            chips=chips, model_flops_global=2.0 * cfg.param_count())
+        if "pod" in mesh.axis_names:
+            npod = mesh.shape["pod"]
+            stacked = jax.tree_util.tree_map(
+                lambda l: jax.ShapeDtypeStruct((npod,) + l.shape, l.dtype),
+                pstruct)
+
+            def _strip_pod(entry):
+                # per-pod client models can't also FSDP-shard over 'pod'
+                if entry == "pod":
+                    return None
+                if isinstance(entry, tuple):
+                    rest = tuple(a for a in entry if a != "pod")
+                    return rest[0] if len(rest) == 1 else (rest or None)
+                return entry
+
+            sspec = jax.tree_util.tree_map(
+                lambda sp: P(*(("pod",) + tuple(_strip_pod(e)
+                                                for e in tuple(sp)))),
+                pspec, is_leaf=lambda x: isinstance(x, P))
+            jf2 = jax.jit(steps_mod.fedavg_step,
+                          in_shardings=(shspecs.named(mesh, sspec),),
+                          out_shardings=shspecs.named(mesh, pspec))
+            comp2 = jf2.lower(stacked).compile()
+            results["fedavg"] = analyze_compiled(
+                comp2, arch=arch, shape="fedavg_pod", mesh_name=mesh_name,
+                chips=chips, model_flops_global=npod * cfg.param_count())
+    return results
+
+
+def run_matrix(archs, shapes, meshes, constrain_acts=True, tag="baseline",
+               out_dir=OUT_DIR, fed: FedConfig | None = None,
+               verbose=True, opts: dict | None = None):
+    fed = fed or FedConfig()
+    os.makedirs(out_dir, exist_ok=True)
+    rows, failures = [], []
+    for mesh_name in meshes:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+        for arch in archs:
+            cfg = get_config(arch)
+            for shape_name in shapes:
+                ok, why = shape_supported(cfg, SHAPES[shape_name])
+                key = f"{arch}|{shape_name}|{mesh_name}"
+                if not ok:
+                    rows.append({"arch": arch, "shape": shape_name,
+                                 "mesh": mesh_name, "status": "SKIP",
+                                 "reason": why})
+                    if verbose:
+                        print(f"[skip] {key}: {why}", flush=True)
+                    continue
+                t0 = time.time()
+                try:
+                    compiled, rep = lower_combo(arch, shape_name, mesh,
+                                                mesh_name, fed,
+                                                constrain_acts=constrain_acts,
+                                                opts=opts)
+                    row = rep.to_dict()
+                    row["status"] = "OK"
+                    row["compile_s"] = time.time() - t0
+                    mem = compiled.memory_analysis()
+                    row["memory_analysis"] = {
+                        k: int(getattr(mem, k, 0)) for k in
+                        ("temp_size_in_bytes", "argument_size_in_bytes",
+                         "output_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes")}
+                    rows.append(row)
+                    fname = os.path.join(
+                        out_dir, f"{tag}_{arch}_{shape_name}_{mesh_name}.json")
+                    with open(fname, "w") as f:
+                        json.dump(row, f, indent=1)
+                    if verbose:
+                        print(f"[ok]   {key}: compute={rep.compute_s*1e3:.2f}ms "
+                              f"memory={rep.memory_s*1e3:.2f}ms "
+                              f"collective={rep.collective_s*1e3:.2f}ms "
+                              f"dominant={rep.dominant} "
+                              f"peakmem={rep.peak_memory_bytes/2**30:.2f}GiB "
+                              f"(compile {row['compile_s']:.1f}s)", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((key, repr(e)))
+                    rows.append({"arch": arch, "shape": shape_name,
+                                 "mesh": mesh_name, "status": "FAIL",
+                                 "error": repr(e)})
+                    if verbose:
+                        print(f"[FAIL] {key}: {e}", flush=True)
+                        traceback.print_exc()
+    summary = os.path.join(out_dir, f"{tag}_summary.json")
+    with open(summary, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows, failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="both")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--no-act-sharding", action="store_true",
+                    help="disable the residual-stream sharding constraint "
+                         "(the unoptimized baseline in §Perf)")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--param-dtype", choices=["f32", "bf16"], default="f32")
+    ap.add_argument("--no-prefill-act", action="store_true")
+    ap.add_argument("--serve-unroll", action="store_true")
+    ap.add_argument("--window-slice", action="store_true")
+    ap.add_argument("--moe-fullgrid", action="store_true")
+    ap.add_argument("--ring-cache", action="store_true")
+    ap.add_argument("--no-moe-shardmap", action="store_true",
+                    help="naive pjit-only MoE dispatch (the pre-fix path)")
+    ap.add_argument("--q-chunk", type=int, default=0)
+    ap.add_argument("--loss-chunk", type=int, default=0)
+    ap.add_argument("--fl-aggregation", action="store_true",
+                    help="lower the FL server programs (mixing + cross-pod "
+                         "FedAvg) instead of the train/serve matrix")
+    args = ap.parse_args(argv)
+
+    archs = args.arch or list(ASSIGNED_ARCHS)
+    shapes = args.shape or list(SHAPES)
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    if args.fl_aggregation:
+        os.makedirs(args.out, exist_ok=True)
+        for mesh_name in meshes:
+            mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+            for arch in archs:
+                res = lower_fl_aggregation(arch, mesh, mesh_name,
+                                           FedConfig())
+                for kind, rep in res.items():
+                    row = rep.to_dict()
+                    fn = os.path.join(args.out,
+                                      f"{args.tag}_fl_{kind}_{arch}_"
+                                      f"{mesh_name}.json")
+                    with open(fn, "w") as f:
+                        json.dump(row, f, indent=1)
+                    print(f"[ok] fl_{kind} {arch}|{mesh_name}: "
+                          f"memory={rep.memory_s*1e3:.2f}ms "
+                          f"collective={rep.collective_s*1e3:.2f}ms "
+                          f"peak={rep.peak_memory_bytes/2**30:.2f}GiB",
+                          flush=True)
+        return 0
+
+    if args.list:
+        for a in archs:
+            cfg = get_config(a)
+            for s in shapes:
+                ok, why = shape_supported(cfg, SHAPES[s])
+                print(f"{a:28s} {s:12s} {'RUN' if ok else 'SKIP  ' + why}")
+        return 0
+
+    opts = {"param_dtype": args.param_dtype,
+            "prefill_act": not args.no_prefill_act,
+            "serve_unroll": args.serve_unroll,
+            "window_slice": args.window_slice,
+            "moe_fullgrid_dispatch": args.moe_fullgrid,
+            "ring_cache": args.ring_cache,
+            "moe_shardmap": not args.no_moe_shardmap,
+            "q_chunk": args.q_chunk, "loss_chunk": args.loss_chunk}
+    rows, failures = run_matrix(archs, shapes, meshes,
+                                constrain_acts=not args.no_act_sharding,
+                                tag=args.tag, out_dir=args.out, opts=opts)
+    ok = sum(1 for r in rows if r.get("status") == "OK")
+    sk = sum(1 for r in rows if r.get("status") == "SKIP")
+    print(f"\n== dry-run: {ok} OK, {sk} skipped, {len(failures)} failed ==")
+    for k, e in failures:
+        print(f"  FAIL {k}: {e}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,19 @@
+"""Production meshes. Functions (not module constants) so importing this
+module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16×16 = 256 chips (data, model).
+    Multi-pod: 2×16×16 = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host actually has (CPU tests: 1 device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

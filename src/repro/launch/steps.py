@@ -1,0 +1,158 @@
+"""jit-able step functions shared by the trainer, server and dry-run.
+
+The *FL client local step* (paper Algorithm 1, client side) is the lowered
+training program: task grads + proximal term θ(w - w_t), SGD-momentum
+update. ``serve_step`` is one token of autoregressive decode against a
+pre-allocated cache. ``mixing_step``/``fedavg_step`` are the server-side
+aggregation programs (lowered across the pod axis on the multi-pod mesh).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import registry
+from repro.optim import sgd
+from repro.optim.proximal import proximal_grad
+from repro.sharding import specs as shspecs
+from repro.types import FedConfig, ModelConfig, ShapeConfig
+
+
+def act_pspec(mesh: Mesh, cfg: ModelConfig, seq_len: int) -> Optional[P]:
+    """Residual-stream sharding constraint (sequence parallelism): shard the
+    sequence dim over 'model' between layers so stored remat residuals are
+    16× smaller. Only when divisible."""
+    if cfg.family == "resnet3d":
+        return None
+    dp = shspecs.data_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    model = shspecs._maybe(mesh, "model", seq_len)
+    return P(dp, model, None)
+
+
+def make_train_step(cfg: ModelConfig, fed: FedConfig, mesh: Mesh,
+                    seq_len: int = 0, proximal: bool = True,
+                    loss_kwargs: Optional[dict] = None,
+                    constrain_acts: bool = True):
+    """FL client local step: (params, opt_state, anchor, batch) ->
+    (params, opt_state, loss)."""
+    opt = sgd(fed.lr, fed.momentum, fed.weight_decay)
+    loss_kwargs = dict(loss_kwargs or {})
+    if cfg.family != "resnet3d":
+        loss_kwargs.setdefault("dtype", jnp.bfloat16)  # bf16 compute
+    if constrain_acts and cfg.family != "resnet3d" and seq_len:
+        ap = act_pspec(mesh, cfg, seq_len)
+        if ap is not None:
+            loss_kwargs.setdefault("act_pspec", ap)
+        if cfg.moe is not None:
+            dp = shspecs.data_axes(mesh)
+            dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+            # per-data-shard MoE dispatch (shard_map) — see models/moe.py
+            loss_kwargs.setdefault("moe_ctx", {"mesh": mesh, "dp": dp})
+
+    def loss(params, batch):
+        return registry.loss_fn(params, cfg, batch, **loss_kwargs)[0]
+
+    def step(params, opt_state, anchor, batch):
+        l, grads = jax.value_and_grad(loss)(params, batch)
+        if proximal:
+            grads = proximal_grad(grads, params, anchor, fed.prox_theta)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, l
+
+    return step, opt
+
+
+def make_serve_step(cfg: ModelConfig, unroll: bool = False,
+                    window_slice: bool = False, ring: bool = False):
+    """(params, token, cache, pos) -> (next_token, cache)."""
+    from repro.models import lm
+    kw = {}
+    if unroll and cfg.family in ("dense", "moe", "hybrid", "vlm", "ssm"):
+        kw = {"unroll": True, "window_slice": window_slice}
+
+    def step(params, token, cache, pos):
+        if ring and cfg.family in ("dense", "moe", "hybrid", "vlm", "ssm"):
+            logits, cache = lm.decode_step_ring(params, cfg, token, cache,
+                                                pos)
+        else:
+            logits, cache = registry.decode_step(params, cfg, token, cache,
+                                                 pos, **kw)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return step
+
+
+def mixing_step(beta_t):
+    """Paper server update w_t = (1-β_t)·w_{t-1} + β_t·w_new (async FL)."""
+    def step(w_prev, w_new):
+        return jax.tree_util.tree_map(
+            lambda a, b: ((1 - beta_t) * a.astype(jnp.float32)
+                          + beta_t * b.astype(jnp.float32)).astype(a.dtype),
+            w_prev, w_new)
+    return step
+
+
+def fedavg_step(w_stacked):
+    """Cross-pod FedAvg: client models stacked on a leading axis sharded
+    over 'pod'; the mean lowers to an all-reduce across pod links."""
+    return jax.tree_util.tree_map(
+        lambda s: jnp.mean(s.astype(jnp.float32), axis=0).astype(s.dtype),
+        w_stacked)
+
+
+# ---------------------------------------------------------------------------
+# Sharding-annotated jit wrappers (used by dryrun / train / serve)
+# ---------------------------------------------------------------------------
+
+def jit_train_step(cfg: ModelConfig, fed: FedConfig, mesh: Mesh,
+                   shape: ShapeConfig, params_shape, batch_shape,
+                   proximal: bool = True, constrain_acts: bool = True,
+                   donate: bool = True, moe_fullgrid: bool = False,
+                   train_kwargs: Optional[dict] = None):
+    """Returns (jitted_fn, (in_shardings, out_shardings)) for
+    step(params, opt_state, anchor, batch)."""
+    lk = dict(train_kwargs or {})
+    if moe_fullgrid and cfg.moe is not None:
+        dp = tuple(shspecs.data_axes(mesh)) + ("model",)
+        lk["moe_ctx"] = {"mesh": mesh, "dp": dp}
+    step, opt = make_train_step(cfg, fed, mesh, seq_len=shape.seq_len,
+                                proximal=proximal, loss_kwargs=lk,
+                                constrain_acts=constrain_acts)
+    pspec = shspecs.param_pspecs(mesh, cfg, params_shape)
+    opt_shape = jax.eval_shape(opt.init, params_shape)
+    ospec = jax.tree_util.tree_map(
+        lambda _: P(), opt_shape,
+        is_leaf=lambda x: x is None)
+    # momentum shards like its param; step counter replicates
+    ospec = {"mom": pspec if opt_shape["mom"] is not None else None,
+             "step": P()}
+    bspec = shspecs.batch_pspecs(mesh, cfg, batch_shape)
+    in_sh = (pspec, ospec, pspec, bspec)
+    out_sh = (pspec, ospec, P())
+    jf = jax.jit(step, in_shardings=shspecs.named(mesh, in_sh),
+                 out_shardings=shspecs.named(mesh, out_sh),
+                 donate_argnums=(0, 1) if donate else ())
+    return jf, (in_sh, out_sh)
+
+
+def jit_serve_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                   params_shape, cache_shape, donate: bool = True,
+                   unroll: bool = False, window_slice: bool = False,
+                   ring: bool = False):
+    step = make_serve_step(cfg, unroll=unroll, window_slice=window_slice,
+                           ring=ring)
+    pspec = shspecs.param_pspecs(mesh, cfg, params_shape)
+    cspec = shspecs.cache_pspecs(mesh, cfg, cache_shape, shape.global_batch)
+    tspec = shspecs.token_pspec(mesh, shape.global_batch)
+    in_sh = (pspec, tspec, cspec, P())
+    out_sh = (tspec, cspec)
+    jf = jax.jit(step, in_shardings=shspecs.named(mesh, in_sh),
+                 out_shardings=shspecs.named(mesh, out_sh),
+                 donate_argnums=(2,) if donate else ())
+    return jf, (in_sh, out_sh)

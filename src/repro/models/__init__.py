@@ -1,0 +1,1 @@
+from repro.models import registry  # noqa: F401

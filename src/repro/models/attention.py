@@ -1,0 +1,188 @@
+"""GQA attention with dynamic sliding windows and KV-cache decode.
+
+The same code path serves full attention (window == 0) and sliding-window
+attention (window > 0) so a scanned layer stack can carry a per-layer window
+scalar. Prefill uses query chunking (exact row softmax against full K) to
+bound the score tensor at (B, H, q_chunk, S_k).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope
+
+NEG_INF = -1e30
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, window,
+               causal: bool) -> jax.Array:
+    """(S_q, S_k) additive bias. window: 0/scalar -> full when 0."""
+    dq = q_pos[:, None]
+    dk = k_pos[None, :]
+    ok = (dq >= dk) if causal else jnp.ones((q_pos.shape[0], k_pos.shape[0]),
+                                            bool)
+    w = jnp.asarray(window, jnp.int32)
+    big = jnp.int32(2**30)
+    w_eff = jnp.where(w == 0, big, w)
+    ok = ok & (dq - dk < w_eff) & (dk >= 0)   # dk<0 = unwritten ring slot
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  window=0, causal: bool = True,
+                  q_offset: jax.Array | int = 0,
+                  k_offset: jax.Array | int = 0,
+                  k_positions: jax.Array | None = None,
+                  k_len: jax.Array | None = None,
+                  q_chunk: int = 1024) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D) -> (B, Sq, H, D).
+
+    ``q_offset``/``k_offset`` are the absolute positions of q[0]/k[0]
+    (decode against a full or window-sliced cache). ``k_positions``
+    overrides them with an arbitrary per-slot position vector (ring-buffer
+    caches; negative = unwritten slot, always masked). ``k_len`` masks
+    absolute cache positions >= k_len (pre-allocated cache).
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    scale = D ** -0.5
+    qg = q.reshape(B, Sq, KV, G, D)
+    k_pos = k_positions if k_positions is not None \
+        else k_offset + jnp.arange(Sk)
+
+    def attend(q_blk, q_pos):
+        # q_blk: (B, C, KV, G, D). bf16 operands, f32 accumulation (MXU).
+        # named_scope lets the roofline analyzer attribute the materialized
+        # score/probability tensors — the buffers the Pallas flash kernel
+        # (kernels/swa_attention.py) keeps in VMEM on TPU.
+        with jax.named_scope("attn_inner"):
+            s = jnp.einsum("bckgd,bskd->bckgs", q_blk, k,
+                           preferred_element_type=jnp.float32) * scale
+            bias = _mask_bias(q_pos, k_pos, window, causal)      # (C, Sk)
+            if k_len is not None:
+                bias = bias + jnp.where(k_pos[None, :] < k_len, 0.0, NEG_INF)
+            s = s + bias[None, :, None, None, :]
+            p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+            return jnp.einsum("bckgs,bskd->bckgd", p, v,
+                              preferred_element_type=jnp.float32
+                              ).astype(q.dtype)
+
+    if Sq <= q_chunk:
+        out = attend(qg, q_offset + jnp.arange(Sq))
+    else:
+        assert Sq % q_chunk == 0, (Sq, q_chunk)
+        n = Sq // q_chunk
+        qs = qg.reshape(B, n, q_chunk, KV, G, D).transpose(1, 0, 2, 3, 4, 5)
+        offs = q_offset + jnp.arange(n) * q_chunk
+
+        def body(_, xs):
+            q_blk, off = xs
+            return None, attend(q_blk, off + jnp.arange(q_chunk))
+
+        _, outs = jax.lax.scan(body, None, (qs, offs))
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KV, G, D)
+    return out.reshape(B, Sq, H, D)
+
+
+# ---------------------------------------------------------------------------
+# Full attention layer (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+def init_attn_params(key, cfg, num_layers: int, dtype=jnp.float32):
+    from repro.models.common import fan_in_init
+    init = fan_in_init()
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    L = num_layers
+    return {
+        "wq": init(ks[0], (L, d, H * hd), dtype),
+        "wk": init(ks[1], (L, d, KV * hd), dtype),
+        "wv": init(ks[2], (L, d, KV * hd), dtype),
+        "wo": init(ks[3], (L, H * hd, d), dtype),
+    }
+
+
+def ring_decode_attend(p, x, *, cfg, ring_k, ring_v, pos, window: int):
+    """Decode attention against a ring-buffer cache of size ``window``.
+
+    ring_k/v: (B, W, KV, D) with slot s holding the latest position
+    p ≡ s (mod W); the new k/v are written at slot pos % W. Returns
+    (out, (ring_k, ring_v)). O(window) HBM per step regardless of context.
+    """
+    B, Sq, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = x.dtype
+    W = ring_k.shape[1]
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(dt)).reshape(B, Sq, H, hd)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(dt)).reshape(B, Sq, KV, hd)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(dt)).reshape(B, Sq, KV, hd)
+    q = apply_rope(q, positions_like(pos), cfg.rope_theta)
+    k = apply_rope(k, positions_like(pos), cfg.rope_theta)
+    slot = jnp.mod(pos, W)
+    ring_k = jax.lax.dynamic_update_slice_in_dim(
+        ring_k, k.astype(ring_k.dtype), slot, axis=1)
+    ring_v = jax.lax.dynamic_update_slice_in_dim(
+        ring_v, v.astype(ring_v.dtype), slot, axis=1)
+    # absolute position per slot (negative = not yet written -> masked)
+    s_idx = jnp.arange(W)
+    k_pos = pos - jnp.mod(pos - s_idx, W)
+    out = gqa_attention(q, ring_k, ring_v, window=window, causal=True,
+                        q_offset=pos, k_positions=k_pos, q_chunk=1)
+    out = jnp.einsum("bse,ef->bsf", out.reshape(B, Sq, H * hd),
+                     p["wo"].astype(dt))
+    return out, (ring_k, ring_v)
+
+
+def positions_like(pos):
+    return pos + jnp.zeros((1,), jnp.int32)
+
+
+def attn_forward(p, x, *, cfg, window, positions, causal=True,
+                 cache=None, cache_index=None, q_chunk=1024,
+                 cache_slice_window: int = 0):
+    """One attention layer (params already per-layer, no leading L).
+
+    cache: optional dict {"k": (B, S_max, KV, D), "v": ...} updated at
+    ``cache_index`` (decode/prefill-into-cache). Returns (out, new_cache).
+
+    ``cache_slice_window`` (static, decode only): attend against a
+    dynamic-slice of the cache covering the last ``window`` positions
+    instead of the whole buffer — SWA layers then read O(window) HBM per
+    step instead of O(S_max) (§Perf optimization, beyond-paper).
+    """
+    B, Sq, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(dt)).reshape(B, Sq, H, hd)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(dt)).reshape(B, Sq, KV, hd)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(dt)).reshape(B, Sq, KV, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        out = gqa_attention(q, k, v, window=window, causal=causal,
+                            q_chunk=q_chunk)
+        new_cache = None
+    else:
+        idx = cache_index if cache_index is not None else 0
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
+            cache["k"].dtype), idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
+            cache["v"].dtype), idx, axis=1)
+        w_slice = cache_slice_window
+        if w_slice and w_slice < ck.shape[1]:
+            start = jnp.clip(idx + Sq - w_slice, 0, ck.shape[1] - w_slice)
+            ks = jax.lax.dynamic_slice_in_dim(ck, start, w_slice, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(cv, start, w_slice, axis=1)
+            out = gqa_attention(q, ks, vs, window=window, causal=causal,
+                                q_offset=idx, k_offset=start,
+                                k_len=idx + Sq, q_chunk=q_chunk)
+        else:
+            out = gqa_attention(q, ck, cv, window=window, causal=causal,
+                                q_offset=idx, k_len=idx + Sq, q_chunk=q_chunk)
+        new_cache = {"k": ck, "v": cv}
+    out = jnp.einsum("bse,ef->bsf", out.reshape(B, Sq, H * hd),
+                     p["wo"].astype(dt))
+    return out, new_cache

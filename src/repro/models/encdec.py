@@ -1,0 +1,219 @@
+"""Encoder-decoder transformer (SeamlessM4T backbone; audio frontend is a
+stub — the encoder consumes precomputed frame embeddings, per the assignment
+carve-out).
+
+Encoder: bidirectional self-attention. Decoder: causal self-attention +
+cross-attention to the encoded source. Both stacks are layer-scanned.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models.attention import gqa_attention
+from repro.models.common import chunked_lm_loss, fan_in_init, normal_init, \
+    rms_norm
+from repro.models.lm import lm_head_weight  # same tied/untied convention
+from repro.types import ModelConfig
+
+
+def init_params(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 12)
+    d, f = cfg.d_model, cfg.d_ff
+    Le, Ld = cfg.num_encoder_layers, cfg.num_layers
+    init = fan_in_init()
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    enc = {
+        "attn": attn_mod.init_attn_params(ks[0], cfg, Le, dtype),
+        "mlp": mlp_mod.init_mlp_params(ks[1], d, f, Le, dtype),
+        "ln1": jnp.zeros((Le, d), dtype),
+        "ln2": jnp.zeros((Le, d), dtype),
+    }
+    dec = {
+        "attn": attn_mod.init_attn_params(ks[2], cfg, Ld, dtype),
+        "xattn": {
+            "wq": init(ks[3], (Ld, d, H * hd), dtype),
+            "wk": init(ks[4], (Ld, d, KV * hd), dtype),
+            "wv": init(ks[5], (Ld, d, KV * hd), dtype),
+            "wo": init(ks[6], (Ld, H * hd, d), dtype),
+        },
+        "mlp": mlp_mod.init_mlp_params(ks[7], d, f, Ld, dtype),
+        "ln1": jnp.zeros((Ld, d), dtype),
+        "lnx": jnp.zeros((Ld, d), dtype),
+        "ln2": jnp.zeros((Ld, d), dtype),
+    }
+    params = {
+        "embed": normal_init(0.02)(ks[8], (cfg.vocab_size, d), dtype),
+        "enc_layers": enc,
+        "dec_layers": dec,
+        "enc_norm": jnp.zeros((d,), dtype),
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(0.02)(ks[9], (d, cfg.vocab_size),
+                                              dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, src_embeds: jax.Array,
+           remat: bool = True, q_chunk: int = 1024,
+           act_pspec=None) -> jax.Array:
+    """src_embeds: (B, S_src, d) precomputed frame embeddings (stub frontend)."""
+    x = src_embeds
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, _ = attn_mod.attn_forward(lp["attn"], h, cfg=cfg, window=0,
+                                     positions=positions, causal=False,
+                                     q_chunk=q_chunk)
+        x = x + a
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp_mod.mlp_forward(lp["mlp"], h2, cfg.act)
+        if act_pspec is not None:
+            x = jax.lax.with_sharding_constraint(x, act_pspec)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_attn(xp, h, enc_k, enc_v, cfg, q_chunk):
+    B, Sq, d = h.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", h,
+                   xp["wq"].astype(h.dtype)).reshape(B, Sq, H, hd)
+    out = gqa_attention(q, enc_k.astype(h.dtype), enc_v.astype(h.dtype),
+                        window=0, causal=False, q_chunk=q_chunk)
+    return jnp.einsum("bse,ef->bsf", out.reshape(B, Sq, H * hd),
+                      xp["wo"].astype(h.dtype))
+
+
+def _enc_kv(xp, enc_out, cfg):
+    B, Sk, d = enc_out.shape
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,de->bse", enc_out,
+                   xp["wk"].astype(dt)).reshape(B, Sk, KV, hd)
+    v = jnp.einsum("bsd,de->bse", enc_out,
+                   xp["wv"].astype(dt)).reshape(B, Sk, KV, hd)
+    return k, v
+
+
+def decode_train(params, cfg: ModelConfig, tokens, enc_out,
+                 remat: bool = True, q_chunk: int = 1024, act_pspec=None):
+    """Teacher-forced decoder pass. Returns hidden (B, S_tgt, d)."""
+    x = params["embed"][tokens].astype(enc_out.dtype)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, _ = attn_mod.attn_forward(lp["attn"], h, cfg=cfg, window=0,
+                                     positions=positions, q_chunk=q_chunk)
+        x = x + a
+        hx = rms_norm(x, lp["lnx"], cfg.norm_eps)
+        ek, ev = _enc_kv(lp["xattn"], enc_out, cfg)
+        x = x + _cross_attn(lp["xattn"], hx, ek, ev, cfg, q_chunk)
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp_mod.mlp_forward(lp["mlp"], h2, cfg.act)
+        if act_pspec is not None:
+            x = jax.lax.with_sharding_constraint(x, act_pspec)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, remat: bool = True,
+            q_chunk: int = 1024, loss_chunk: int = 512, dtype=None,
+            act_pspec=None):
+    """batch: src_embeds (B, S_src, d), tokens (B, S_tgt), labels (B, S_tgt)."""
+    src = batch["src_embeds"]
+    if dtype is not None:
+        src = src.astype(dtype)
+    enc_out = encode(params, cfg, src, remat=remat, q_chunk=q_chunk,
+                     act_pspec=act_pspec)
+    hidden = decode_train(params, cfg, batch["tokens"], enc_out,
+                          remat=remat, q_chunk=q_chunk, act_pspec=act_pspec)
+    head = lm_head_weight(params, cfg).astype(hidden.dtype)
+    ce = chunked_lm_loss(hidden, head, batch["labels"], chunk=loss_chunk)
+    return ce, {"ce": ce, "aux": jnp.float32(0.0)}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, src_len: int, tgt_len: int,
+               dtype=jnp.bfloat16):
+    Ld = cfg.num_layers
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "enc_k": jnp.zeros((Ld, batch, src_len, KV, hd), dtype),
+        "enc_v": jnp.zeros((Ld, batch, src_len, KV, hd), dtype),
+        "k": jnp.zeros((Ld, batch, tgt_len, KV, hd), dtype),
+        "v": jnp.zeros((Ld, batch, tgt_len, KV, hd), dtype),
+    }
+
+
+def prefill(params, cfg: ModelConfig, src_embeds, cache,
+            q_chunk: int = 1024):
+    """Encode the source and precompute per-layer cross-attention K/V."""
+    enc_out = encode(params, cfg, src_embeds, remat=False, q_chunk=q_chunk)
+
+    def body(_, lp):
+        k, v = _enc_kv(lp["xattn"], enc_out, cfg)
+        return None, (k, v)
+
+    _, (ek, ev) = jax.lax.scan(body, None, params["dec_layers"])
+    cache = dict(cache)
+    cache["enc_k"] = ek.astype(cache["enc_k"].dtype)
+    cache["enc_v"] = ev.astype(cache["enc_v"].dtype)
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos, dtype=None):
+    """One target-token step. Returns (logits (B, V), cache)."""
+    x = params["embed"][token][:, None, :]
+    if dtype is not None:
+        x = x.astype(dtype)
+    positions = pos + jnp.zeros((1,), jnp.int32)
+
+    def body(carry, xs):
+        x = carry
+        lp, ek, ev, ck, cv = xs
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, ac = attn_mod.attn_forward(
+            lp["attn"], h, cfg=cfg, window=0, positions=positions,
+            cache={"k": ck, "v": cv}, cache_index=pos, q_chunk=1)
+        x = x + a
+        hx = rms_norm(x, lp["lnx"], cfg.norm_eps)
+        x = x + _cross_attn(lp["xattn"], hx, ek, ev, cfg, q_chunk=1)
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp_mod.mlp_forward(lp["mlp"], h2, cfg.act)
+        return x, (ac["k"], ac["v"])
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["enc_k"], cache["enc_v"],
+                  cache["k"], cache["v"]))
+    cache = dict(cache)
+    cache["k"], cache["v"] = nk, nv
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, 0, :],
+                        lm_head_weight(params, cfg).astype(x.dtype))
+    return logits, cache

@@ -1,0 +1,27 @@
+"""Gated MLP (SwiGLU / GeGLU / squared-ReLU-GLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activation, fan_in_init
+
+
+def init_mlp_params(key, d_model: int, d_ff: int, num_layers: int,
+                    dtype=jnp.float32):
+    init = fan_in_init()
+    ks = jax.random.split(key, 3)
+    L = num_layers
+    return {
+        "wg": init(ks[0], (L, d_model, d_ff), dtype),
+        "wi": init(ks[1], (L, d_model, d_ff), dtype),
+        "wo": init(ks[2], (L, d_ff, d_model), dtype),
+    }
+
+
+def mlp_forward(p, x, act: str = "silu"):
+    dt = x.dtype
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dt))
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt))
+    y = activation(act)(g) * h
+    return jnp.einsum("bsf,fd->bsd", y, p["wo"].astype(dt))

@@ -1,0 +1,143 @@
+"""Family dispatch: one uniform API over all architectures.
+
+    init_params(key, cfg, dtype)            -> param pytree
+    loss_fn(params, cfg, batch, **kw)       -> (loss, metrics)
+    init_cache(cfg, batch, shape...)        -> serving cache
+    decode_step(params, cfg, token, cache, pos) -> (logits, cache)
+    batch_spec(cfg, shape)                  -> jax.ShapeDtypeStruct inputs
+    synth_batch(rng, cfg, shape)            -> concrete random batch (smoke)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, lm, resnet3d
+from repro.types import ModelConfig, ShapeConfig
+
+LM_FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm")
+ENCDEC_FAMILIES = ("encdec", "audio")
+
+# Decoder-side target length used by enc-dec serving shapes: the assigned
+# seq_len measures the *source*; the decoder cache is bounded separately.
+ENCDEC_TGT_LEN = 1024
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    if cfg.family in LM_FAMILIES:
+        return lm.init_params(key, cfg, dtype)
+    if cfg.family in ENCDEC_FAMILIES:
+        return encdec.init_params(key, cfg, dtype)
+    if cfg.family == "resnet3d":
+        return resnet3d.init_params(key, cfg, dtype)
+    raise ValueError(cfg.family)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, **kw):
+    if cfg.family in LM_FAMILIES:
+        return lm.loss_fn(params, cfg, batch, **kw)
+    if cfg.family in ENCDEC_FAMILIES:
+        return encdec.loss_fn(params, cfg, batch, **kw)
+    if cfg.family == "resnet3d":
+        return resnet3d.loss_fn(params, cfg, batch, **kw)
+    raise ValueError(cfg.family)
+
+
+def logits_fn(params, cfg: ModelConfig, batch: dict, **kw):
+    """Full logits (KD needs them). LM: (B,S,V); resnet: (B, classes)."""
+    if cfg.family in LM_FAMILIES:
+        return lm.logits_fn(params, cfg, batch["tokens"],
+                            batch.get("prefix_embeds"), **kw)
+    if cfg.family in ENCDEC_FAMILIES:
+        enc_out = encdec.encode(params, cfg, batch["src_embeds"], remat=False)
+        hidden = encdec.decode_train(params, cfg, batch["tokens"], enc_out,
+                                     remat=False)
+        head = lm.lm_head_weight(params, cfg).astype(hidden.dtype)
+        return jnp.einsum("bsd,dv->bsv", hidden, head)
+    if cfg.family == "resnet3d":
+        return resnet3d.forward(params, cfg, batch["clips"])
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16):
+    if cfg.family in LM_FAMILIES:
+        return lm.init_cache(cfg, batch, seq_len, dtype)
+    if cfg.family in ENCDEC_FAMILIES:
+        return encdec.init_cache(cfg, batch, seq_len, ENCDEC_TGT_LEN, dtype)
+    raise ValueError(f"{cfg.family}: no autoregressive cache")
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos, **kw):
+    if cfg.family in LM_FAMILIES:
+        return lm.decode_step(params, cfg, token, cache, pos, **kw)
+    if cfg.family in ENCDEC_FAMILIES:
+        return encdec.decode_step(params, cfg, token, cache, pos, **kw)
+    raise ValueError(cfg.family)
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, cache, **kw):
+    if cfg.family in LM_FAMILIES:
+        return lm.prefill(params, cfg, batch["tokens"], cache,
+                          batch.get("prefix_embeds"), **kw)
+    if cfg.family in ENCDEC_FAMILIES:
+        return encdec.prefill(params, cfg, batch["src_embeds"], cache, **kw)
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Input specs / synthetic batches
+# ---------------------------------------------------------------------------
+
+def batch_spec(cfg: ModelConfig, shape: ShapeConfig, act_dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for a *training/prefill* batch (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "resnet3d":
+        ishape = resnet3d.input_shape(cfg, B)
+        return {"clips": jax.ShapeDtypeStruct(ishape, act_dtype),
+                "labels": jax.ShapeDtypeStruct((B,), jnp.int32)}
+    if cfg.family in ENCDEC_FAMILIES:
+        tgt = S // 2 if shape.kind == "train" else ENCDEC_TGT_LEN
+        src = S - tgt if shape.kind == "train" else S
+        return {
+            "src_embeds": jax.ShapeDtypeStruct((B, src, cfg.d_model),
+                                               act_dtype),
+            "tokens": jax.ShapeDtypeStruct((B, tgt), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, tgt), jnp.int32),
+        }
+    spec = {}
+    text = S
+    if cfg.prefix_len:
+        text = S - cfg.prefix_len
+        spec["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.prefix_len, cfg.d_model), act_dtype)
+    spec["tokens"] = jax.ShapeDtypeStruct((B, text), jnp.int32)
+    spec["labels"] = jax.ShapeDtypeStruct((B, text), jnp.int32)
+    return spec
+
+
+def decode_spec(cfg: ModelConfig, shape: ShapeConfig, cache_dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for one serve_step: (token, cache, pos)."""
+    B, S = shape.global_batch, shape.seq_len
+    token = jax.ShapeDtypeStruct((B,), jnp.int32)
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, B, S, cache_dtype))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return token, cache, pos
+
+
+def synth_batch(rng: np.random.Generator, cfg: ModelConfig,
+                shape: ShapeConfig, act_dtype=jnp.float32):
+    """Concrete random batch matching batch_spec (for smoke tests)."""
+    spec = batch_spec(cfg, shape, act_dtype)
+    out = {}
+    for k, s in spec.items():
+        if s.dtype == jnp.int32:
+            hi = cfg.num_classes if cfg.family == "resnet3d" else cfg.vocab_size
+            out[k] = jnp.asarray(rng.integers(0, hi, s.shape, dtype=np.int32))
+        else:
+            out[k] = jnp.asarray(
+                rng.standard_normal(s.shape, dtype=np.float32)).astype(s.dtype)
+    return out

@@ -1,0 +1,149 @@
+"""3-D ResNets (Hara et al.) — the paper's teacher/TA/student family.
+
+NDHWC layout (channel-last, TPU-native). BasicBlock with two 3x3x3 convs and
+a 1x1x1 projection shortcut on stride/width changes (paper Fig. 2). BatchNorm
+is replaced by GroupNorm(32) — identical FLOP profile, no cross-device batch
+stats to synchronize in the federated setting (each client's batches are tiny
+and non-IID; the paper's BN stats would drift — noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.resnet3d import BLOCKS, CLIP_FRAMES, CLIP_SIZE
+from repro.types import ModelConfig
+
+STAGE_WIDTHS = (1, 2, 4, 8)  # multiples of the stem width
+
+
+def _conv_init(key, shape, dtype=jnp.float32):
+    fan_in = math.prod(shape[:-1])
+    return (jax.random.normal(key, shape) / math.sqrt(fan_in)).astype(dtype)
+
+
+def _blocks(cfg: ModelConfig):
+    return BLOCKS[cfg.name.replace("-reduced", "")]
+
+
+def init_params(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    w0 = cfg.d_model
+    ks = iter(jax.random.split(key, 256))
+    params: dict = {
+        "stem": {"w": _conv_init(next(ks), (3, 7, 7, 3, w0), dtype),
+                 "gn": jnp.ones((w0,), dtype)},
+        "stages": [],
+    }
+    c_in = w0
+    for si, nblk in enumerate(_blocks(cfg)):
+        c_out = w0 * STAGE_WIDTHS[si]
+        stage = []
+        for bi in range(nblk):
+            cin = c_in if bi == 0 else c_out
+            blk = {
+                "w1": _conv_init(next(ks), (3, 3, 3, cin, c_out), dtype),
+                "gn1": jnp.ones((c_out,), dtype),
+                "w2": _conv_init(next(ks), (3, 3, 3, c_out, c_out), dtype),
+                "gn2": jnp.ones((c_out,), dtype),
+            }
+            if cin != c_out:
+                blk["proj"] = _conv_init(next(ks), (1, 1, 1, cin, c_out),
+                                         dtype)
+            stage.append(blk)
+        params["stages"].append(stage)
+        c_in = c_out
+    params["fc"] = {
+        "w": _conv_init(next(ks), (c_in, cfg.num_classes), dtype),
+        "b": jnp.zeros((cfg.num_classes,), dtype),
+    }
+    return params
+
+
+def _group_norm(x, scale, groups: int = 32, eps: float = 1e-5):
+    C = x.shape[-1]
+    g = math.gcd(groups, C)
+    shape = x.shape[:-1] + (g, C // g)
+    xg = x.reshape(shape).astype(jnp.float32)
+    mean = jnp.mean(xg, axis=(1, 2, 3, 5), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 3, 5), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(x.shape) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _conv3d(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride,) * 3, padding="SAME",
+        dimension_numbers=("NDHWC", "DHWIO", "NDHWC"))
+
+
+def forward(params, cfg: ModelConfig, clips: jax.Array) -> jax.Array:
+    """clips: (B, T, H, W, 3) -> logits (B, num_classes)."""
+    x = _conv3d(clips, params["stem"]["w"], stride=2)
+    x = jax.nn.relu(_group_norm(x, params["stem"]["gn"]))
+    for si, stage in enumerate(params["stages"]):
+        for bi, blk in enumerate(stage):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            h = _conv3d(x, blk["w1"], stride=stride)
+            h = jax.nn.relu(_group_norm(h, blk["gn1"]))
+            h = _conv3d(h, blk["w2"])
+            h = _group_norm(h, blk["gn2"])
+            sc = x if "proj" not in blk else _conv3d(x, blk["proj"],
+                                                     stride=stride)
+            if stride != 1 and "proj" not in blk:
+                sc = sc[:, ::stride, ::stride, ::stride, :]
+            x = jax.nn.relu(h + sc)
+    x = jnp.mean(x, axis=(1, 2, 3))                     # global avg pool
+    return x @ params["fc"]["w"] + params["fc"]["b"]
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, **_) -> tuple:
+    """batch: clips (B, T, H, W, 3), labels (B,)."""
+    logits = forward(params, cfg, batch["clips"])
+    from repro.models.common import cross_entropy
+    ce = cross_entropy(logits, batch["labels"])
+    return ce, {"ce": ce, "aux": jnp.float32(0.0)}
+
+
+def param_count(cfg: ModelConfig) -> int:
+    w0 = cfg.d_model
+    n = 3 * 7 * 7 * 3 * w0
+    c_in = w0
+    for si, nblk in enumerate(_blocks(cfg)):
+        c_out = w0 * STAGE_WIDTHS[si]
+        for bi in range(nblk):
+            cin = c_in if bi == 0 else c_out
+            n += 27 * cin * c_out + 27 * c_out * c_out
+            if cin != c_out:
+                n += cin * c_out
+        c_in = c_out
+    return n + c_in * cfg.num_classes
+
+
+def macs_per_clip(cfg: ModelConfig, frames: int = CLIP_FRAMES,
+                  size: int = CLIP_SIZE) -> float:
+    """Multiply-accumulates for one clip forward pass (convs reuse weights
+    spatially — per-sample FLOPs = 2*MACs >> 2*params for CNNs)."""
+    w0 = cfg.d_model
+    t, hw = frames / 2, size / 2          # stem stride 2
+    macs = (t * hw * hw) * 3 * 7 * 7 * 3 * w0
+    c_in = w0
+    for si, nblk in enumerate(_blocks(cfg)):
+        c_out = w0 * STAGE_WIDTHS[si]
+        if si > 0:
+            t, hw = max(t / 2, 1), hw / 2
+        vox = t * hw * hw
+        for bi in range(nblk):
+            cin = c_in if bi == 0 else c_out
+            macs += vox * 27 * (cin * c_out + c_out * c_out)
+            if cin != c_out:
+                macs += vox * cin * c_out
+        c_in = c_out
+    return float(macs)
+
+
+def input_shape(cfg: ModelConfig, batch: int):
+    if "reduced" in cfg.name:
+        return (batch, 4, 16, 16, 3)
+    return (batch, CLIP_FRAMES, CLIP_SIZE, CLIP_SIZE, 3)

@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (Optimizer, adamw, sgd, trainable_mask,
+                                    apply_mask)
+from repro.optim.proximal import proximal_grad
+from repro.optim.schedules import constant, cosine, inverse_sqrt
+
+__all__ = ["Optimizer", "sgd", "adamw", "trainable_mask", "apply_mask",
+           "proximal_grad", "constant", "cosine", "inverse_sqrt"]

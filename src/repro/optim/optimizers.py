@@ -1,0 +1,117 @@
+"""Minimal optax-style optimizers (no external deps).
+
+An Optimizer is (init, update): update(grads, state, params) ->
+(new_params, new_state). The paper's setting is SGD with momentum 0.9 and
+weight decay (0.001 for KD, 0 for fine-tuning).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def _tree_zeros(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def sgd(lr, momentum: float = 0.0, weight_decay: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    """lr: float or callable step -> lr."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        mom = _tree_zeros(params) if momentum else None
+        return {"mom": mom, "step": jnp.int32(0)}
+
+    def update(grads, state, params):
+        step = state["step"]
+        eta = lr_fn(step)
+        if weight_decay:
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p, grads, params)
+        if momentum:
+            mom = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, state["mom"], grads)
+            eff = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, mom, grads) if nesterov else mom
+            new_state = {"mom": mom, "step": step + 1}
+        else:
+            eff = grads
+            new_state = {"mom": None, "step": step + 1}
+        new_params = jax.tree_util.tree_map(
+            lambda p, g: (p - eta * g).astype(p.dtype), params, eff)
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"m": _tree_zeros(params), "v": _tree_zeros(params),
+                "step": jnp.int32(0)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        eta = lr_fn(step)
+        m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                   state["m"], grads)
+        v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                   state["v"], grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p
+            return (p - eta * u).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Trainable masks — the paper fine-tunes only the final FC layer (§V-B)
+# ---------------------------------------------------------------------------
+
+def trainable_mask(params, mode: str = "all"):
+    """Pytree of 0/1 floats. mode: 'all' | 'last_layer'.
+
+    'last_layer' keeps the classifier head trainable: 'fc' (resnet3d),
+    'lm_head' (untied LMs) or 'embed' + 'final_norm' (tied LMs).
+    """
+    if mode == "all":
+        return jax.tree_util.tree_map(lambda _: 1.0, params)
+    if mode != "last_layer":
+        raise ValueError(mode)
+    head_keys = {"fc", "lm_head", "final_norm", "enc_norm"}
+    tied = "lm_head" not in params and "fc" not in params
+    if tied:
+        head_keys = head_keys | {"embed"}
+
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    paths, treedef = flat[0], flat[1]
+
+    def leaf_mask(path_leaf):
+        path, _ = path_leaf
+        top = path[0].key if hasattr(path[0], "key") else str(path[0])
+        return 1.0 if top in head_keys else 0.0
+
+    return jax.tree_util.tree_unflatten(treedef,
+                                        [leaf_mask(pl) for pl in paths])
+
+
+def apply_mask(grads, mask):
+    return jax.tree_util.tree_map(lambda g, m: g * m, grads, mask)

@@ -1,0 +1,31 @@
+"""The paper's proximal local objective (§III-D):
+
+    g_{w_t}(w; d) = l(w; d) + (θ/2)·||w - w_t||²
+
+so ∇g = ∇l + θ·(w - w_t). ``proximal_grad`` adds the regularization term to
+plain task gradients given the global anchor w_t.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def proximal_grad(grads, params, anchor, theta: float):
+    if theta == 0.0:
+        return grads
+    return jax.tree_util.tree_map(
+        lambda g, p, a: g + theta * (p.astype(jnp.float32)
+                                     - a.astype(jnp.float32)).astype(g.dtype),
+        grads, params, anchor)
+
+
+def proximal_penalty(params, anchor, theta: float):
+    """(θ/2)·||w - w_t||² as a scalar (for logging / loss reporting)."""
+    if theta == 0.0:
+        return jnp.float32(0.0)
+    sq = jax.tree_util.tree_map(
+        lambda p, a: jnp.sum(jnp.square(p.astype(jnp.float32)
+                                        - a.astype(jnp.float32))),
+        params, anchor)
+    return 0.5 * theta * jax.tree_util.tree_reduce(jnp.add, sq, jnp.float32(0))

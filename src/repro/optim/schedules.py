@@ -1,0 +1,29 @@
+"""Learning-rate schedules (step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 0,
+           final_frac: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1),
+                     0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def inverse_sqrt(lr: float, warmup: int = 100):
+    """η = lr/√max(step, warmup) — the theorem's η = 1/√E choice."""
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        return lr / jnp.sqrt(jnp.maximum(step, warmup))
+    return fn

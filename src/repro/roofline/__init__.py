@@ -1,0 +1,5 @@
+from repro.roofline.analysis import (HW, RooflineReport, analyze_compiled,
+                                     parse_collective_bytes)
+
+__all__ = ["HW", "RooflineReport", "analyze_compiled",
+           "parse_collective_bytes"]

@@ -1,0 +1,5 @@
+from repro.sharding.specs import (batch_pspecs, cache_pspecs, data_axes,
+                                  named, param_pspecs, token_pspec)
+
+__all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs", "data_axes",
+           "named", "token_pspec"]

@@ -1,0 +1,20 @@
+import os
+import sys
+
+# tests run on the host's single real device (dry-run sets its own flags in
+# a subprocess; never globally here).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def smoke_shape():
+    from repro.types import ShapeConfig
+    return ShapeConfig("smoke", seq_len=64, global_batch=2, kind="train")

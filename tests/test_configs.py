@@ -1,0 +1,98 @@
+"""The assigned architecture table, verbatim."""
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, shape_supported
+
+EXPECT = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+    "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+    "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+    "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+    "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+    "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+    "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+    "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+    "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_exact_assigned_config(arch):
+    cfg = get_config(arch)
+    L, d, H, KV, ff, V = EXPECT[arch]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == H
+    assert cfg.num_kv_heads == KV
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == V
+    assert cfg.source  # every config cites its source
+
+
+def test_moe_structure():
+    l4 = get_config("llama4-scout-17b-a16e")
+    assert l4.moe.num_experts == 16 and l4.moe.top_k == 1
+    gk = get_config("grok-1-314b")
+    assert gk.moe.num_experts == 8 and gk.moe.top_k == 2
+
+
+def test_ssm_structure():
+    m2 = get_config("mamba2-130m")
+    assert m2.ssm.d_state == 128 and m2.attention_free
+    hy = get_config("hymba-1.5b")
+    assert hy.ssm.d_state == 16 and hy.family == "hybrid"
+
+
+def test_gemma3_local_global_pattern():
+    g = get_config("gemma3-12b")
+    wins = [g.window_for_layer(i) for i in range(12)]
+    # 5 local : 1 global
+    assert wins[:6] == [1024] * 5 + [0]
+    assert wins[6:12] == [1024] * 5 + [0]
+
+
+def test_hymba_global_layers():
+    h = get_config("hymba-1.5b")
+    assert h.window_for_layer(0) == 0
+    assert h.window_for_layer(15) == 0
+    assert h.window_for_layer(31) == 0
+    assert h.window_for_layer(1) == 1024
+
+
+def test_shapes():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_context_skip_list():
+    runs = [a for a in ASSIGNED_ARCHS
+            if shape_supported(get_config(a), SHAPES["long_500k"])[0]]
+    assert sorted(runs) == sorted(
+        ["mamba2-130m", "hymba-1.5b", "gemma3-12b", "h2o-danube-3-4b"])
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_variants_are_small(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.num_layers <= 2
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    assert cfg.family == get_config(arch).family
+
+
+def test_param_counts_plausible():
+    # order-of-magnitude sanity vs the names
+    assert 250e9 < get_config("grok-1-314b").param_count() < 400e9
+    assert 80e9 < get_config("llama4-scout-17b-a16e").param_count() < 130e9
+    act = get_config("llama4-scout-17b-a16e").active_param_count()
+    assert 10e9 < act < 25e9          # "17B active"
+    assert 9e9 < get_config("gemma3-12b").param_count() < 16e9
+    assert 100e6 < get_config("mamba2-130m").param_count() < 200e6

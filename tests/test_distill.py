@@ -1,0 +1,84 @@
+"""Knowledge distillation (paper §III-B, §V-A)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distill
+from repro.configs import RESNET18, RESNET26, RESNET34
+from repro.data import SyntheticActionDataset, BatchLoader
+from repro.models import registry
+from repro.types import DistillConfig
+
+
+def test_kd_loss_formula(rng):
+    s = jnp.asarray(rng.standard_normal((8, 40)), jnp.float32)
+    t = jnp.asarray(rng.standard_normal((8, 40)), jnp.float32)
+    lab = jnp.asarray(rng.integers(0, 40, 8), jnp.int32)
+    # alpha=1 -> pure CE ; alpha=0 -> pure MSE-sum
+    ce = distill.kd_loss(s, t, lab, alpha=1.0)
+    mse = distill.kd_loss(s, t, lab, alpha=0.0)
+    want_mse = jnp.mean(jnp.sum((s - t) ** 2, axis=-1))
+    np.testing.assert_allclose(float(mse), float(want_mse), rtol=1e-6)
+    mid = distill.kd_loss(s, t, lab, alpha=0.3)
+    np.testing.assert_allclose(float(mid), 0.3 * float(ce)
+                               + 0.7 * float(want_mse), rtol=1e-6)
+
+
+def test_kd_loss_kernel_path_matches(rng):
+    s = jnp.asarray(rng.standard_normal((6, 4, 100)), jnp.float32)
+    t = jnp.asarray(rng.standard_normal((6, 4, 100)), jnp.float32)
+    lab = jnp.asarray(rng.integers(0, 100, (6, 4)), jnp.int32)
+    a = distill.kd_loss(s, t, lab, 0.5, use_kernel=False)
+    b = distill.kd_loss(s, t, lab, 0.5, use_kernel=True)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-5)
+
+
+@pytest.mark.slow
+def test_distillation_chain_runs_and_reports():
+    """teacher -> TA -> student chain executes; accuracies are sane."""
+    t_cfg, ta_cfg, s_cfg = (RESNET34.reduced(), RESNET26.reduced(),
+                            RESNET18.reduced())
+    ds = SyntheticActionDataset(num_classes=8, samples_per_class=16,
+                                noise=0.3, seed=3)
+    loader = BatchLoader(ds, 8, steps=12, seed=0)
+    eval_b = list(ds.batches(8, 4, seed=99))
+    dcfg = DistillConfig(alpha=0.5, lr=0.02,
+                         chain=(t_cfg.name, ta_cfg.name, s_cfg.name))
+    params, stages = distill.run_chain(
+        [t_cfg, ta_cfg, s_cfg], dcfg, loader, eval_b,
+        steps_per_stage=12, seed=0, trained_teacher_steps=12)
+    assert len(stages) == 2
+    assert stages[0].teacher == t_cfg.name
+    assert stages[1].student == s_cfg.name
+    for st in stages:
+        assert np.isfinite(st.losses).all()
+        assert st.losses[-1] < st.losses[0] * 1.5   # didn't blow up
+        assert 0.0 <= st.accuracy <= 1.0
+
+
+def test_chain_time_model_monotone():
+    """Table I shape: more TAs => strictly more time."""
+    chains = [
+        [RESNET34, RESNET18],
+        [RESNET34, RESNET26, RESNET18],
+    ]
+    times = [distill.chain_time_model(c, dataset_items=1e6, epochs=200)
+             ["total_s"] for c in chains]
+    assert times[1] > times[0]
+    # FLOPs-proportional model: adding the TA stage grows time but less
+    # than doubles-per-stage would naively suggest (the paper's measured
+    # +23% is smaller still — its wall time is input-pipeline bound).
+    ratio = times[1] / times[0]
+    assert 1.05 < ratio < 3.0
+
+
+def test_vocab_mismatch_rejected():
+    import dataclasses
+    bad = dataclasses.replace(RESNET18, vocab_size=7, num_classes=7,
+                              name="resnet3d-18")
+    with pytest.raises(ValueError, match="equal logit width"):
+        distill.run_chain([RESNET34, bad], DistillConfig(),
+                          lambda: iter([]), [], steps_per_stage=0,
+                          teacher_params={})

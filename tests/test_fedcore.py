@@ -1,0 +1,185 @@
+"""Asynchronous federated optimization core (paper Algorithm 1) + FedAvg."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import convergence, fedasync, fedavg
+from repro.core.fedasync import ServerState, server_receive, staleness_fn
+from repro.types import FedConfig
+
+
+def test_staleness_function():
+    s = staleness_fn(0.5)
+    assert float(s(0)) == 1.0                       # s(0) = 1
+    vals = [float(s(x)) for x in range(6)]
+    assert all(a > b for a, b in zip(vals, vals[1:]))   # monotone decreasing
+    np.testing.assert_allclose(float(s(3)), (1 + 3) ** -0.5)
+    # a=0 -> no staleness penalty
+    s0 = staleness_fn(0.0)
+    assert all(float(s0(x)) == 1.0 for x in range(5))
+
+
+def test_server_mixing_update():
+    fed = FedConfig(mixing_beta=0.7, staleness_a=0.5)
+    w = {"a": jnp.zeros(3), "b": jnp.ones(2)}
+    w_new = {"a": jnp.ones(3), "b": jnp.zeros(2)}
+    st = ServerState(params=w, t=0)
+    st2 = server_receive(st, w_new, tau=0, fed=fed)
+    # staleness 0 -> beta_t = 0.7
+    np.testing.assert_allclose(np.asarray(st2.params["a"]), 0.7, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(st2.params["b"]), 0.3, rtol=1e-6)
+    assert st2.t == 1
+
+    # stale update gets down-weighted: beta_t = 0.7 * (1+4)^-0.5
+    st3 = ServerState(params=w, t=4)
+    st4 = server_receive(st3, w_new, tau=0, fed=fed)
+    beta = 0.7 * 5 ** -0.5
+    np.testing.assert_allclose(np.asarray(st4.params["a"]), beta, rtol=1e-6)
+
+
+def test_staleness_clamped_at_K():
+    fed = FedConfig(mixing_beta=0.7, staleness_a=0.5, max_staleness=4)
+    w = {"a": jnp.zeros(1)}
+    st = ServerState(params=w, t=100)
+    st2 = server_receive(st, {"a": jnp.ones(1)}, tau=0, fed=fed)
+    beta = 0.7 * (1 + 4) ** -0.5
+    np.testing.assert_allclose(np.asarray(st2.params["a"]), beta, rtol=1e-6)
+
+
+def test_proximal_gradient():
+    from repro.optim.proximal import proximal_grad, proximal_penalty
+    g = {"w": jnp.ones(3)}
+    p = {"w": jnp.full(3, 2.0)}
+    anchor = {"w": jnp.zeros(3)}
+    out = proximal_grad(g, p, anchor, theta=0.5)
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.0 + 0.5 * 2.0)
+    pen = proximal_penalty(p, anchor, 0.5)
+    np.testing.assert_allclose(float(pen), 0.5 * 0.5 * 12.0)
+    assert proximal_grad(g, p, anchor, 0.0) is g
+
+
+def test_fedavg_weighted_average():
+    trees = [{"w": jnp.zeros(2)}, {"w": jnp.ones(2)}, {"w": jnp.full(2, 4.0)}]
+    w = jnp.asarray([0.5, 0.25, 0.25])
+    avg = fedavg.weighted_average(trees, w)
+    np.testing.assert_allclose(np.asarray(avg["w"]), 0.25 + 1.0)
+
+
+def test_client_update_quadratic_converges():
+    """On a quadratic task the proximal client step solves the paper's local
+    objective: min l(w) + θ/2||w - w_t||² has closed form; check descent."""
+    from repro.models import registry  # noqa: F401 (import check)
+    # emulate with direct optimizer machinery on a toy loss
+    from repro.optim import sgd
+    from repro.optim.proximal import proximal_grad
+    target = jnp.asarray([3.0, -2.0])
+    w0 = {"w": jnp.zeros(2)}
+    theta = 0.3
+    opt = sgd(0.1)
+    state = opt.init(w0)
+    w = w0
+    for _ in range(200):
+        grads = {"w": (w["w"] - target)}
+        grads = proximal_grad(grads, w, w0, theta)
+        w, state = opt.update(grads, state, w)
+    # fixed point of l + prox: w* = (target + θ·w0)/(1+θ)
+    np.testing.assert_allclose(np.asarray(w["w"]),
+                               np.asarray(target) / (1 + theta), rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Convergence bound (Theorem §IV-B)
+# ---------------------------------------------------------------------------
+
+def test_bound_decreases_with_E():
+    base = dict(beta=0.7, eta=0.01, eps=1.0, K=4, lam=3.0, H_min=1,
+                F0_minus_FE=5.0)
+    b1 = convergence.bound(convergence.BoundInputs(E=10, **base))
+    b2 = convergence.bound(convergence.BoundInputs(E=1000, **base))
+    assert b2 < b1
+
+
+def test_asymptotic_term_matches_paper():
+    b = convergence.BoundInputs(E=10**9, beta=0.7, eta=1e-9, eps=2.0, K=4,
+                                lam=3.0, H_min=1, F0_minus_FE=5.0)
+    asym = convergence.asymptotic_bound(b)
+    np.testing.assert_allclose(asym, 0.7 * 4 * 3.0 / 2.0)
+    # with eta = 1/sqrt(E) and E large, total bound approaches the
+    # staleness term + optimality term; eps scaling kills it
+    big = convergence.BoundInputs(E=10**8,
+                                  eta=convergence.lr_schedule_for_asymptotic(
+                                      10**8),
+                                  beta=0.7, eps=100.0, K=4, lam=3.0, H_min=1,
+                                  F0_minus_FE=5.0)
+    assert convergence.bound(big) < 1.0
+
+
+def test_bound_monotonicities():
+    base = dict(E=100, beta=0.7, eta=0.01, eps=1.0, H_min=1, F0_minus_FE=5.0)
+    t_k2 = convergence.bound_terms(
+        convergence.BoundInputs(K=2, lam=3.0, **base))
+    t_k8 = convergence.bound_terms(
+        convergence.BoundInputs(K=8, lam=3.0, **base))
+    assert t_k8["staleness"] > t_k2["staleness"]
+    t_l1 = convergence.bound_terms(
+        convergence.BoundInputs(K=4, lam=1.0, **base))
+    t_l5 = convergence.bound_terms(
+        convergence.BoundInputs(K=4, lam=5.0, **base))
+    assert t_l5["local_drift"] > t_l1["local_drift"]
+
+
+def test_theta_condition():
+    assert not convergence.theta_condition(0.1, mu=0.5, eps=1.0, B2=1.0,
+                                           drift_sq=1.0)   # θ <= μ
+    th = convergence.min_theta(mu=0.5, eps=1.0, B2=1.0, drift_sq=4.0)
+    assert np.isfinite(th)
+    assert convergence.theta_condition(th + 1e-6, 0.5, 1.0, 1.0, 4.0)
+    assert not convergence.theta_condition(th - 0.1, 0.5, 1.0, 1.0, 4.0)
+
+
+# ---------------------------------------------------------------------------
+# Communication-efficient updates (int8 delta quantization)
+# ---------------------------------------------------------------------------
+
+def test_quantized_delta_roundtrip_error_bound():
+    from repro.core.compression import (compression_ratio, quantize_delta,
+                                        roundtrip)
+    rng = np.random.default_rng(0)
+    anchor = {"w": jnp.asarray(rng.standard_normal((64, 64)), jnp.float32),
+              "b": jnp.asarray(rng.standard_normal(64), jnp.float32)}
+    w_new = jax.tree_util.tree_map(
+        lambda a: a + 0.01 * jnp.asarray(
+            rng.standard_normal(a.shape), jnp.float32), anchor)
+    recon, upd = roundtrip(w_new, anchor)
+    # max error <= scale/2 per leaf
+    for r, w, s in zip(jax.tree_util.tree_leaves(recon),
+                       jax.tree_util.tree_leaves(w_new),
+                       jax.tree_util.tree_leaves(upd.scale)):
+        assert float(jnp.max(jnp.abs(r - w))) <= float(s) * 0.51
+    assert compression_ratio(upd) > 3.5      # ~4x vs f32
+
+
+def test_async_fl_with_compression_converges():
+    from repro.configs import RESNET18
+    from repro.core import simulator
+    from repro.core.simulator import JETSON_FLEET_HMDB51
+    from repro.data import BatchLoader, SyntheticActionDataset, iid_partition
+    from repro.models import registry
+    cfg = RESNET18.reduced()
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    ds = SyntheticActionDataset(num_classes=8, samples_per_class=8, seed=1)
+    parts = iid_partition(len(ds), 4)
+    data = [BatchLoader(ds, 4, steps=4, seed=k, indices=parts[k])
+            for k in range(4)]
+    losses = {}
+    for bits in (0, 8):
+        fed = FedConfig(num_clients=4, global_epochs=10, local_iters_min=1,
+                        local_iters_max=2, lr=0.05, compress_bits=bits)
+        res = simulator.run_async(params, cfg, fed, JETSON_FLEET_HMDB51,
+                                  data)
+        losses[bits] = res.final_loss
+    # compression costs little accuracy at smoke scale
+    assert np.isfinite(losses[8])
+    assert losses[8] < losses[0] * 2.0 + 2.0

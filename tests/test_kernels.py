@@ -1,0 +1,137 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode executes the exact TPU program on CPU)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.kd_loss import kd_loss_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.kernels.swa_attention import swa_attention_pallas
+
+
+# ---------------------------------------------------------------------------
+# kd_loss
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("R,V", [(8, 512), (37, 1000), (64, 4096), (3, 300)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("alpha", [0.0, 0.5, 1.0])
+def test_kd_loss_sweep(R, V, dtype, alpha, rng):
+    s = jnp.asarray(rng.standard_normal((R, V)), dtype)
+    t = jnp.asarray(rng.standard_normal((R, V)), dtype)
+    lab = jnp.asarray(rng.integers(0, V, R), jnp.int32)
+    got = kd_loss_pallas(s, t, lab, alpha, interpret=True)
+    want = ref.kd_loss_ref(s, t, lab, alpha)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * max(1.0, float(
+                                   jnp.max(jnp.abs(want)))))
+
+
+def test_kd_loss_jit_wrapper_means(rng):
+    s = jnp.asarray(rng.standard_normal((4, 7, 128)), jnp.float32)
+    t = jnp.asarray(rng.standard_normal((4, 7, 128)), jnp.float32)
+    lab = jnp.asarray(rng.integers(0, 128, (4, 7)), jnp.int32)
+    got = ops.kd_loss(s, t, lab, 0.3)
+    want = jnp.mean(ref.kd_loss_ref(s.reshape(28, 128), t.reshape(28, 128),
+                                    lab.reshape(28), 0.3))
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# swa_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,D,w", [(256, 64, 32), (256, 64, 100),
+                                   (128, 128, 128), (512, 64, 200),
+                                   (256, 128, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_attention_sweep(S, D, w, dtype, rng):
+    BH = 3
+    q = jnp.asarray(rng.standard_normal((BH, S, D)) * 0.3, dtype)
+    k = jnp.asarray(rng.standard_normal((BH, S, D)) * 0.3, dtype)
+    v = jnp.asarray(rng.standard_normal((BH, S, D)), dtype)
+    got = swa_attention_pallas(q, k, v, w, q_block=min(128, S),
+                               k_block=min(128, S), interpret=True)
+    want = ref.swa_attention_ref(q, k, v, w)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_swa_full_attention_equals_window_S(rng):
+    BH, S, D = 2, 256, 64
+    q = jnp.asarray(rng.standard_normal((BH, S, D)) * 0.2, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((BH, S, D)) * 0.2, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((BH, S, D)), jnp.float32)
+    got = ops.swa_attention(q, k, v, window=0)       # 0 -> full causal
+    want = ref.swa_attention_ref(q, k, v, S)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_swa_matches_model_attention(rng):
+    """Kernel agrees with the model's jnp attention path (GQA folded)."""
+    from repro.models.attention import gqa_attention
+    B, S, H, D, w = 2, 128, 4, 64, 48
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)) * 0.3, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    want = gqa_attention(q, k, v, window=w, q_chunk=64)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    got = ops.swa_attention(qf, kf, vf, window=w)
+    got = got.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,H,P,N,chunk", [(128, 2, 32, 16, 32),
+                                           (256, 3, 64, 16, 64),
+                                           (256, 2, 32, 128, 128),
+                                           (64, 1, 64, 64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(S, H, P, N, chunk, dtype, rng):
+    B = 2
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)), dtype)
+    dt = jax.nn.softplus(jnp.asarray(rng.standard_normal((B, S, H)),
+                                     jnp.float32))
+    A = -jnp.exp(jnp.asarray(rng.standard_normal(H) * 0.3, jnp.float32))
+    Bm = jnp.asarray(rng.standard_normal((B, S, N)) * 0.5, dtype)
+    Cm = jnp.asarray(rng.standard_normal((B, S, N)) * 0.5, dtype)
+    yk, hk = ssd_scan_pallas(x, dt, A, Bm, Cm, chunk, interpret=True)
+    yr, hr = ref.ssd_scan_ref(x, dt, A, Bm, Cm, chunk)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    scale = max(1.0, float(jnp.max(jnp.abs(yr))))
+    np.testing.assert_allclose(np.asarray(yk, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=tol, atol=tol * scale)
+    np.testing.assert_allclose(np.asarray(hk, np.float32),
+                               np.asarray(hr, np.float32),
+                               rtol=tol, atol=tol * scale)
+
+
+def test_ssd_chunked_matches_sequential(rng):
+    """The chunked algorithm (model + kernel oracle) vs the O(S) recurrence."""
+    B, S, H, P, N = 2, 128, 2, 16, 8
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.standard_normal((B, S, H)),
+                                     jnp.float32))
+    A = -jnp.exp(jnp.asarray(rng.standard_normal(H) * 0.3, jnp.float32))
+    Bm = jnp.asarray(rng.standard_normal((B, S, N)) * 0.5, jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, N)) * 0.5, jnp.float32)
+    yc, hc = ref.ssd_scan_ref(x, dt, A, Bm, Cm, chunk=32)
+    ys, hs = ref.ssd_sequential_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(ys),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(hc), np.asarray(hs),
+                               rtol=1e-3, atol=1e-3)

@@ -1,0 +1,110 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import convergence
+from repro.core.fedasync import ServerState, server_receive, staleness_fn
+from repro.data import dirichlet_partition, iid_partition
+from repro.kernels import ref
+from repro.models.moe import capacity
+from repro.types import FedConfig, MoEConfig
+
+F = st.floats(min_value=-5, max_value=5, allow_nan=False,
+              allow_infinity=False)
+
+
+@given(a=st.floats(0.0, 2.0), x=st.integers(0, 1000))
+def test_staleness_in_unit_interval(a, x):
+    v = float(staleness_fn(a)(x))
+    assert 0.0 < v <= 1.0
+    assert v <= float(staleness_fn(a)(max(x - 1, 0)))
+
+
+@given(beta=st.floats(0.05, 0.95), stale=st.integers(0, 50),
+       w0=F, wn=F)
+@settings(max_examples=30, deadline=None)
+def test_mixing_is_convex_combination(beta, stale, w0, wn):
+    """w_t always lies between w_{t-1} and w_new (elementwise)."""
+    fed = FedConfig(mixing_beta=beta, staleness_a=0.5, max_staleness=100)
+    state = ServerState(params={"w": jnp.asarray([w0])}, t=stale)
+    out = server_receive(state, {"w": jnp.asarray([wn])}, tau=0, fed=fed)
+    v = float(out.params["w"][0])
+    lo, hi = min(w0, wn), max(w0, wn)
+    assert lo - 1e-5 <= v <= hi + 1e-5
+    # staleness moves the result toward the old value
+    fresh = server_receive(ServerState(params={"w": jnp.asarray([w0])}, t=0),
+                           {"w": jnp.asarray([wn])}, tau=0, fed=fed)
+    assert abs(v - w0) <= abs(float(fresh.params["w"][0]) - w0) + 1e-6
+
+
+@given(T=st.integers(1, 10000), E=st.integers(1, 64),
+       k=st.integers(1, 4), cf=st.floats(1.0, 2.0))
+def test_capacity_bounds(T, E, k, cf):
+    moe = MoEConfig(num_experts=E, top_k=min(k, E), capacity_factor=cf)
+    C = capacity(T, moe)
+    assert C >= 1
+    assert C * E >= T * moe.top_k          # total slots >= total assignments
+
+
+@given(n=st.integers(1, 200), c=st.integers(1, 8))
+def test_iid_partition_complete_and_disjoint(n, c):
+    parts = iid_partition(n, min(c, n), seed=0)
+    cat = np.concatenate(parts) if parts else np.array([])
+    assert len(cat) == n
+    assert len(np.unique(cat)) == n
+
+
+@given(alpha=st.floats(0.05, 10.0), c=st.integers(2, 6))
+@settings(max_examples=20, deadline=None)
+def test_dirichlet_partition_complete(alpha, c):
+    labels = np.repeat(np.arange(5), 30)
+    parts = dirichlet_partition(labels, c, alpha=alpha, seed=1)
+    cat = np.concatenate([p for p in parts if len(p)])
+    assert len(cat) == len(labels)
+    assert len(np.unique(cat)) == len(labels)
+
+
+@given(rows=st.integers(1, 12), vocab=st.integers(2, 300),
+       alpha=st.floats(0.0, 1.0), seed=st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_kd_loss_nonnegative_and_zero_at_match(rows, vocab, alpha, seed):
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray(rng.standard_normal((rows, vocab)), jnp.float32)
+    lab = jnp.asarray(rng.integers(0, vocab, rows), jnp.int32)
+    loss = ref.kd_loss_ref(s, s, lab, alpha)
+    # teacher == student -> KD term zero; CE >= 0
+    assert float(jnp.min(loss)) >= -1e-4
+    pure_mse = ref.kd_loss_ref(s, s, lab, 0.0)
+    np.testing.assert_allclose(np.asarray(pure_mse), 0.0, atol=1e-5)
+
+
+@given(E=st.integers(1, 10**6), beta=st.floats(0.05, 0.95),
+       K=st.integers(1, 32), lam=st.floats(1.0, 8.0))
+@settings(max_examples=50, deadline=None)
+def test_bound_positive_and_asymptotic_dominates(E, beta, K, lam):
+    b = convergence.BoundInputs(
+        E=E, beta=beta, eta=1.0 / math.sqrt(E), eps=1.0, K=K, lam=lam,
+        H_min=1, F0_minus_FE=1.0)
+    terms = convergence.bound_terms(b)
+    assert all(v >= 0 for v in terms.values())
+    assert convergence.bound(b) >= convergence.asymptotic_bound(b) * 0.99
+
+
+@given(S=st.sampled_from([32, 64, 128]), w=st.integers(1, 128),
+       seed=st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_swa_rows_are_probability_weighted(S, w, seed):
+    """Each attention output row is a convex combination of values."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((1, S, 8)) * 0.3, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, S, 8)) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, S, 8)), jnp.float32)
+    out = ref.swa_attention_ref(q, k, v, min(w, S))
+    vmin, vmax = float(jnp.min(v)), float(jnp.max(v))
+    assert float(jnp.min(out)) >= vmin - 1e-4
+    assert float(jnp.max(out)) <= vmax + 1e-4
