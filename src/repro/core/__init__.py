@@ -3,6 +3,8 @@
 # staleness-adaptive mixing (fedasync.py), the synchronous FedAvg baseline
 # (fedavg.py), the heterogeneous-fleet event simulator (simulator.py) and
 # the convergence-bound evaluator (convergence.py).
-from repro.core import convergence, distill, fedasync, fedavg, simulator
+from repro.core import (convergence, distill, fed_engine, fedasync, fedavg,
+                        simulator)
 
-__all__ = ["distill", "fedasync", "fedavg", "simulator", "convergence"]
+__all__ = ["distill", "fed_engine", "fedasync", "fedavg", "simulator",
+           "convergence"]

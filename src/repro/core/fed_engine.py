@@ -1,0 +1,204 @@
+"""Compiled client-execution engine for the federated hot path.
+
+The legacy path (``fedasync.client_update`` / ``fedavg.fedavg_round_loop``)
+dispatches one jitted ``step(...)`` per local iteration and host-syncs
+``float(loss)`` after each — at simulator scale the fleet is dispatch-bound,
+not compute-bound. This module collapses the H local proximal-SGD iterations
+into a single ``jax.lax.scan`` over a pre-stacked batch pytree (zero
+per-iteration host syncs) and, for synchronous rounds, runs *all* clients as
+one batched program with ``jax.vmap`` (the global anchor broadcasts; the
+per-client batch stacks carry a leading client axis).
+
+Compilation is cached per ``(H, trainable)``: the simulator assigns each
+device a static local-iteration budget H^k ∈ [H_min, H_max], so a
+heterogeneous fleet triggers at most ``H_max - H_min + 1`` compiles and then
+runs compile-free. The legacy loop remains in place as a parity oracle
+(tests/test_fed_engine.py checks float32 agreement).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry
+from repro.optim import apply_mask, proximal_grad, sgd, trainable_mask
+from repro.types import FedConfig, ModelConfig
+
+
+def stack_client_batches(client_batch_stacks: Sequence[Any]):
+    """Stack per-client batch stacks (each leaf (H, ...)) into one pytree
+    with a leading client axis (n_clients, H, ...) for the vmap round.
+
+    All clients must share the same H and batch shapes (homogeneous sync
+    round); raises ValueError otherwise so callers can fall back to the
+    per-client loop.
+    """
+    if not client_batch_stacks:
+        raise ValueError("no client batch stacks")
+    shapes = [
+        tuple(l.shape for l in jax.tree_util.tree_leaves(s))
+        for s in client_batch_stacks
+    ]
+    if any(s != shapes[0] for s in shapes[1:]):
+        raise ValueError(
+            f"heterogeneous client batch stacks {shapes}; the vmap round "
+            "needs a homogeneous fleet — use the per-client loop instead")
+    return jax.tree_util.tree_map(
+        lambda *leaves: np.stack(leaves), *client_batch_stacks)
+
+
+def _batch_len(stacked) -> int:
+    return int(jax.tree_util.tree_leaves(stacked)[0].shape[0])
+
+
+class ClientRun:
+    """Scan-compiled local training: H proximal SGD iterations in one call.
+
+    ``engine(params_global, stacked, mask=None)`` -> ``(w_new, losses)``
+    where ``stacked`` is a batch pytree with leading axis H (see
+    ``repro.data.stack_batches``) and ``losses`` is a device array of shape
+    (H,) — the only host sync the caller pays is reading it.
+    """
+
+    def __init__(self, cfg: ModelConfig, fed: FedConfig, loss_kwargs=None):
+        self.cfg = cfg
+        self.fed = fed
+        self.loss_kwargs = dict(loss_kwargs or {})
+        self.opt = sgd(fed.lr, fed.momentum, fed.weight_decay)
+        self._jit_run = jax.jit(self._run)
+
+    # -- pure (unjitted) core, reused by the vmap round ------------------
+    def _task_loss(self, params, batch):
+        return registry.loss_fn(params, self.cfg, batch,
+                                **self.loss_kwargs)[0]
+
+    def _run(self, params_global, stacked, mask):
+        anchor = params_global
+
+        def body(carry, batch):
+            params, opt_state = carry
+            loss, grads = jax.value_and_grad(self._task_loss)(params, batch)
+            grads = proximal_grad(grads, params, anchor, self.fed.prox_theta)
+            grads = apply_mask(grads, mask)
+            params, opt_state = self.opt.update(grads, opt_state, params)
+            return (params, opt_state), loss
+
+        init = (params_global, self.opt.init(params_global))
+        (w_new, _), losses = jax.lax.scan(body, init, stacked)
+        return w_new, losses
+
+    @property
+    def num_compiled(self) -> int:
+        """Distinct programs actually traced: H is the scan length (a
+        static shape), so the jit wrapper compiles once per distinct H
+        (trainable is fixed per engine; see ``_engine_key``) and then
+        dispatches compile-free."""
+        return self._jit_run._cache_size()
+
+    def __call__(self, params_global, stacked, mask=None):
+        if mask is None:
+            mask = trainable_mask(params_global, self.fed.trainable)
+        return self._jit_run(params_global, stacked, mask)
+
+
+_ENGINE_CACHE: dict = {}
+_ENGINE_CACHE_MAX = 32      # FIFO-bounded: engines hold compiled executables
+
+
+def _engine_key(kind: str, cfg: ModelConfig, fed: FedConfig, loss_kwargs):
+    """Cache key over the fields that affect the compiled client program.
+
+    Server-side knobs (mixing_beta, staleness_a, ...) don't — two sweeps
+    differing only in staleness must share compiled engines.
+    """
+    lk = tuple(sorted((loss_kwargs or {}).items()))
+    key = (kind, cfg, fed.lr, fed.momentum, fed.weight_decay,
+           fed.prox_theta, fed.trainable, lk)
+    try:
+        hash(key)
+    except TypeError:
+        return None
+    return key
+
+
+def _cached_engine(kind, cfg, fed, loss_kwargs, build):
+    key = _engine_key(kind, cfg, fed, loss_kwargs)
+    if key is None:                       # unhashable loss_kwargs
+        return build()
+    if key not in _ENGINE_CACHE:
+        while len(_ENGINE_CACHE) >= _ENGINE_CACHE_MAX:
+            _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
+        _ENGINE_CACHE[key] = build()
+    return _ENGINE_CACHE[key]
+
+
+def make_client_run(cfg: ModelConfig, fed: FedConfig,
+                    loss_kwargs=None) -> ClientRun:
+    """The scan engine replacing per-iteration ``step(...)`` dispatch.
+
+    Memoized on the client-relevant config fields so repeated simulator
+    runs (hyperparameter sweeps, benchmarks) reuse compiled programs.
+    """
+    return _cached_engine("client", cfg, fed, loss_kwargs,
+                          lambda: ClientRun(cfg, fed, loss_kwargs))
+
+
+class SyncRound:
+    """vmap-over-clients FedAvg round: one batched program per round.
+
+    ``round(params_global, client_stacks, weights, mask=None)`` ->
+    ``(new_global, losses (n_clients, H))``. ``client_stacks`` is either a
+    sequence of per-client stacked batch pytrees (stacked here) or an
+    already client-stacked pytree with leading (n_clients, H) axes.
+    """
+
+    def __init__(self, cfg: ModelConfig, fed: FedConfig, loss_kwargs=None):
+        # share the memoized ClientRun (it is stateless): async dispatches
+        # and the sync round's inner scan then reuse one trace cache
+        self.client = make_client_run(cfg, fed, loss_kwargs)
+        self.fed = fed
+        self._jit_rnd = jax.jit(self._rnd)
+
+    def _rnd(self, params_global, stacked_clients, weights, mask):
+        # anchor (and mask) broadcast; batch stacks are per-client
+        w_news, losses = jax.vmap(
+            lambda s: self.client._run(params_global, s, mask)
+        )(stacked_clients)
+        new = jax.tree_util.tree_map(
+            lambda l, p: jnp.einsum(
+                "c,c...->...", weights,
+                l.astype(jnp.float32)).astype(p.dtype),
+            w_news, params_global)
+        return new, losses
+
+    @property
+    def num_compiled(self) -> int:
+        """Distinct traced programs — one per (n_clients, H) shape."""
+        return self._jit_rnd._cache_size()
+
+    def __call__(self, params_global, client_stacks, weights=None,
+                 mask=None):
+        if isinstance(client_stacks, (list, tuple)):
+            client_stacks = stack_client_batches(client_stacks)
+        n = int(jax.tree_util.tree_leaves(client_stacks)[0].shape[0])
+        if weights is None:
+            weights = jnp.full((n,), 1.0 / n, jnp.float32)
+        else:
+            weights = jnp.asarray(weights, jnp.float32)
+        if mask is None:
+            mask = trainable_mask(params_global, self.fed.trainable)
+        return self._jit_rnd(params_global, client_stacks, weights, mask)
+
+
+def make_sync_round(cfg: ModelConfig, fed: FedConfig,
+                    loss_kwargs=None) -> SyncRound:
+    """The vmap engine replacing fedavg's per-client Python loop.
+
+    Memoized like ``make_client_run``.
+    """
+    return _cached_engine("sync", cfg, fed, loss_kwargs,
+                          lambda: SyncRound(cfg, fed, loss_kwargs))

@@ -42,15 +42,23 @@ class ServerState:
     total_updates: int = 0
 
 
+@jax.jit
+def _mix(params, w_new, beta_t):
+    return jax.tree_util.tree_map(
+        lambda a, b: ((1.0 - beta_t) * a.astype(jnp.float32)
+                      + beta_t * b.astype(jnp.float32)).astype(a.dtype),
+        params, w_new)
+
+
 def make_server_update(fed: FedConfig):
-    """Jitted mixing update: (w_{t-1}, w_new, β_t) -> w_t."""
-    @jax.jit
-    def mix(params, w_new, beta_t):
-        return jax.tree_util.tree_map(
-            lambda a, b: ((1.0 - beta_t) * a.astype(jnp.float32)
-                          + beta_t * b.astype(jnp.float32)).astype(a.dtype),
-            params, w_new)
-    return mix
+    """Jitted mixing update: (w_{t-1}, w_new, β_t) -> w_t.
+
+    The mixing program is config-independent (β_t arrives as an argument),
+    so every FedConfig shares ONE jitted function: ``server_receive``
+    with ``mix=None`` used to build a fresh ``jax.jit`` wrapper on every
+    receive, paying trace+compile for each update it applied.
+    """
+    return _mix
 
 
 def server_receive(state: ServerState, w_new, tau: int, fed: FedConfig,
@@ -94,6 +102,14 @@ def make_client_step(cfg: ModelConfig, fed: FedConfig, loss_kwargs=None):
     return step, opt
 
 
+@functools.lru_cache(maxsize=16)
+def cached_client_step(cfg: ModelConfig, fed: FedConfig):
+    """Memoized ``make_client_step`` (no loss_kwargs — those can be
+    unhashable): repeated simulator runs reuse the jitted step instead of
+    re-tracing a fresh closure per run."""
+    return make_client_step(cfg, fed)
+
+
 def client_update(params_global, t: int, batches, cfg: ModelConfig,
                   fed: FedConfig, step=None, opt=None, mask=None,
                   num_iters: int | None = None):
@@ -101,6 +117,11 @@ def client_update(params_global, t: int, batches, cfg: ModelConfig,
 
     ``batches`` is an iterable of local data batches (length >= H).
     Returns (w_new, tau=t, losses).
+
+    This is the legacy per-iteration dispatch loop (one jitted step + one
+    ``float(loss)`` host sync per iteration). The compiled hot path lives
+    in ``repro.core.fed_engine`` (lax.scan / vmap); this loop is kept as
+    the parity oracle the engine is tested against.
     """
     if step is None:
         step, opt = make_client_step(cfg, fed)

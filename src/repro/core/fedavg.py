@@ -4,15 +4,27 @@ Each round every client runs E_local epochs from the current global model;
 the server replaces the model with the data-size-weighted average. Wall
 clock per round = slowest client (the straggler penalty the async variant
 removes).
+
+``fedavg_round`` runs the whole round as ONE batched program: client batch
+stacks get a leading client axis and ``jax.vmap`` maps the scan-compiled
+local training over it (see core/fed_engine.py), so a homogeneous sync
+round costs a single dispatch instead of n_clients × H jitted steps plus
+n_clients × H host syncs. ``fedavg_round_loop`` is the legacy per-client
+Python loop, kept as the parity oracle.
 """
 from __future__ import annotations
 
+import itertools
 from typing import Sequence
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.fedasync import make_client_step
+from repro.core import fed_engine
+from repro.core.fedasync import cached_client_step, make_client_step
+from repro.data.synthetic import stack_batches
 from repro.optim import trainable_mask
 from repro.types import FedConfig, ModelConfig
 
@@ -27,12 +39,111 @@ def weighted_average(param_trees: Sequence, weights: jax.Array):
     return jax.tree_util.tree_map(avg, *param_trees)
 
 
-def fedavg_round(params_global, client_batches: Sequence, cfg: ModelConfig,
-                 fed: FedConfig, step=None, opt=None, mask=None,
-                 data_sizes: Sequence[int] | None = None):
-    """One synchronous round. client_batches: per-client iterable of batches.
+def _client_weights(n: int, data_sizes: Sequence[int] | None):
+    if data_sizes is None:
+        return jnp.full((n,), 1.0 / n, jnp.float32)
+    s = jnp.asarray(data_sizes, jnp.float32)
+    return s / jnp.sum(s)
 
-    Returns (new_global_params, per_client_losses).
+
+def fedavg_round(params_global, client_batches: Sequence, cfg: ModelConfig,
+                 fed: FedConfig, engine: fed_engine.SyncRound | None = None,
+                 mask=None, data_sizes: Sequence[int] | None = None):
+    """One synchronous round as a single vmap-batched program.
+
+    ``client_batches``: per-client iterable of batches (the legacy
+    contract); each is stacked to H = fed.local_iters_max iterations and
+    all clients run together. Returns (new_global_params,
+    per_client_losses) with losses as lists of floats, matching the loop
+    oracle. The vmap program needs a homogeneous fleet — ragged clients
+    (out of data, or batch shapes that don't stack) drop to a per-client
+    fallback; see ``_ragged_fallback``.
+    """
+    # materialize up to H batches per client first: iterators may be
+    # generators, so raggedness must be detected before anything is lost
+    client_lists = [list(itertools.islice(b, fed.local_iters_max))
+                    for b in client_batches]
+    if client_lists and _is_homogeneous(client_lists):
+        # stack straight to (n_clients, H, ...) — one host copy, not a
+        # per-client stack followed by a cross-client restack
+        keys = list(client_lists[0][0])
+        stacked_clients = {
+            k: np.stack([[b[k] for b in bl] for bl in client_lists])
+            for k in keys}
+        if engine is None:
+            engine = fed_engine.make_sync_round(cfg, fed)
+        weights = _client_weights(len(client_lists), data_sizes)
+        new_global, losses = engine(params_global, stacked_clients,
+                                    weights=weights, mask=mask)
+        return new_global, [[float(x) for x in row]
+                            for row in np.asarray(losses)]
+    return _ragged_fallback(params_global, client_lists, cfg, fed,
+                            engine, mask, data_sizes)
+
+
+def _is_homogeneous(client_lists) -> bool:
+    """True when every client has the same non-zero batch count and every
+    batch shares keys/shapes/dtypes — the vmap program's precondition."""
+    first = client_lists[0]
+    if not first or any(len(bl) != len(first) for bl in client_lists):
+        return False
+
+    def sig(b):
+        return tuple(sorted((k, np.shape(v), str(np.asarray(v).dtype))
+                            for k, v in b.items()))
+
+    ref = sig(first[0])
+    return all(sig(b) == ref for bl in client_lists for b in bl)
+
+
+def _ragged_fallback(params_global, client_lists, cfg, fed, engine,
+                     mask, data_sizes):
+    """Per-client runs + weighted average when the vmap program can't form:
+    stackable clients use the scan engine, within-client-ragged ones drop
+    to the per-iteration step loop, empty ones return the global model."""
+    # reuse the round engine's client (and its compile cache) if provided —
+    # a fresh ClientRun per round would recompile every call
+    run = engine.client if engine is not None \
+        else fed_engine.make_client_run(cfg, fed)
+    if mask is None:
+        mask = trainable_mask(params_global, fed.trainable)
+    results, losses = [], []
+    for bl in client_lists:
+        if not bl:                          # client out of data
+            results.append(params_global)
+            losses.append([])
+            continue
+        try:
+            s = stack_batches(bl)
+        except ValueError:                  # ragged shapes within client:
+            s = None                        # per-iteration oracle path
+        if s is None:
+            step, opt = cached_client_step(cfg, fed)
+            params = params_global
+            opt_state = opt.init(params)
+            cl = []
+            for batch in bl:
+                params, opt_state, loss = step(params, opt_state,
+                                               params_global, batch, mask)
+                cl.append(float(loss))
+            results.append(params)
+            losses.append(cl)
+        else:
+            w_new, ls = run(params_global, s, mask=mask)
+            results.append(w_new)
+            losses.append([float(x) for x in np.asarray(ls)])
+    return (weighted_average(results,
+                             _client_weights(len(results), data_sizes)),
+            losses)
+
+
+def fedavg_round_loop(params_global, client_batches: Sequence,
+                      cfg: ModelConfig, fed: FedConfig, step=None, opt=None,
+                      mask=None, data_sizes: Sequence[int] | None = None):
+    """Legacy per-client / per-iteration loop — the engine's parity oracle.
+
+    One jitted step dispatch and one ``float(loss)`` host sync per local
+    iteration. Returns (new_global_params, per_client_losses).
     """
     if step is None:
         step, opt = make_client_step(cfg, fed)
@@ -50,9 +161,5 @@ def fedavg_round(params_global, client_batches: Sequence, cfg: ModelConfig,
         results.append(params)
         losses.append(cl)
     n = len(results)
-    if data_sizes is None:
-        w = jnp.full((n,), 1.0 / n, jnp.float32)
-    else:
-        s = jnp.asarray(data_sizes, jnp.float32)
-        w = s / jnp.sum(s)
-    return weighted_average(results, w), losses
+    return (weighted_average(results, _client_weights(n, data_sizes)),
+            losses)

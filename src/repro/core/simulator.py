@@ -18,8 +18,9 @@ from typing import Callable, Iterable, Optional, Sequence
 
 import numpy as np
 
-from repro.core import fedasync, fedavg
-from repro.core.fedasync import ServerState, make_client_step, server_receive
+from repro.core import fed_engine, fedasync, fedavg
+from repro.core.fedasync import ServerState, server_receive
+from repro.data.synthetic import stack_batches
 from repro.optim import trainable_mask
 from repro.types import FedConfig, ModelConfig
 
@@ -83,7 +84,9 @@ def _client_time(profile: DeviceProfile, local_iters: int,
     epochs = local_iters / max(iters_per_epoch, 1)
     t = profile.epoch_seconds * epochs + profile.upload_seconds
     if jitter:
-        t *= float(rng.lognormal(mean=0.0, sigma=jitter))
+        # E[lognormal(μ, σ)] = exp(μ + σ²/2); μ = -σ²/2 makes the
+        # multiplier mean-one so jitter does not inflate wall-clocks.
+        t *= float(rng.lognormal(mean=-0.5 * jitter * jitter, sigma=jitter))
     return t
 
 
@@ -96,14 +99,24 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
               client_data: Sequence[Callable[[], Iterable]],
               iters_per_epoch: int = 1, jitter: float = 0.0,
               eval_fn: Optional[Callable] = None,
-              eval_every: int = 10) -> SimResult:
+              eval_every: int = 10, engine: str = "scan") -> SimResult:
     """Virtual-clock run of asynchronous federated learning.
 
     client_data[k]() returns a fresh iterator of batches for client k.
+
+    ``engine``: "scan" (default) runs each client's H local iterations as
+    one compiled ``lax.scan`` program (core/fed_engine.py) — one dispatch
+    and one host sync per *update* instead of per *iteration*. "loop" is
+    the legacy per-iteration path, kept as a parity oracle. The
+    event-driven virtual clock is identical under both.
     """
     assert len(fleet) == len(client_data) == fed.num_clients
+    assert engine in ("scan", "loop"), engine
     rng = np.random.default_rng(fed.seed)
-    step, opt = make_client_step(cfg, fed)
+    if engine == "scan":
+        run = fed_engine.make_client_run(cfg, fed)
+    else:
+        step, opt = fedasync.cached_client_step(cfg, fed)
     mask = trainable_mask(params0, fed.trainable)
     mix = fedasync.make_server_update(fed)
     server = ServerState(params=params0, t=0)
@@ -127,9 +140,17 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
         nonlocal seq
         tau = server.t
         # run the local training NOW (numerically); finish time is virtual
-        w_new, _, losses = fedasync.client_update(
-            server.params, tau, client_data[k](), cfg, fed, step=step,
-            opt=opt, mask=mask, num_iters=H[k])
+        if engine == "scan":
+            stacked = stack_batches(client_data[k](), limit=H[k])
+            if stacked is None:           # client out of data
+                w_new, losses = server.params, []
+            else:
+                w_new, loss_arr = run(server.params, stacked, mask=mask)
+                losses = [float(loss_arr[-1])]   # single host sync
+        else:
+            w_new, _, losses = fedasync.client_update(
+                server.params, tau, client_data[k](), cfg, fed, step=step,
+                opt=opt, mask=mask, num_iters=H[k])
         if fed.compress_bits:
             # int8 delta on the wire; server reconstructs against the
             # anchor it handed out (communication-efficient FL, §II)
@@ -172,11 +193,20 @@ def run_sync(params0, cfg: ModelConfig, fed: FedConfig,
              client_data: Sequence[Callable[[], Iterable]],
              iters_per_epoch: int = 1, jitter: float = 0.0,
              eval_fn: Optional[Callable] = None,
-             eval_every: int = 10) -> SimResult:
-    """Virtual-clock synchronous FedAvg: each round costs max(client time)."""
+             eval_every: int = 10, engine: str = "scan") -> SimResult:
+    """Virtual-clock synchronous FedAvg: each round costs max(client time).
+
+    ``engine="scan"`` (default) runs every round as one vmap-over-clients
+    batched program; ``"loop"`` is the legacy per-client loop (parity
+    oracle).
+    """
     assert len(fleet) == len(client_data) == fed.num_clients
+    assert engine in ("scan", "loop"), engine
     rng = np.random.default_rng(fed.seed)
-    step, opt = make_client_step(cfg, fed)
+    if engine == "scan":
+        round_engine = fed_engine.make_sync_round(cfg, fed)
+    else:
+        step, opt = fedasync.cached_client_step(cfg, fed)
     mask = trainable_mask(params0, fed.trainable)
     params = params0
     now = 0.0
@@ -185,8 +215,13 @@ def run_sync(params0, cfg: ModelConfig, fed: FedConfig,
     rounds = max(rounds, 1)
     for r in range(rounds):
         batches = [client_data[k]() for k in range(fed.num_clients)]
-        params, losses = fedavg.fedavg_round(params, batches, cfg, fed,
-                                             step=step, opt=opt, mask=mask)
+        if engine == "scan":
+            params, losses = fedavg.fedavg_round(params, batches, cfg, fed,
+                                                 engine=round_engine,
+                                                 mask=mask)
+        else:
+            params, losses = fedavg.fedavg_round_loop(
+                params, batches, cfg, fed, step=step, opt=opt, mask=mask)
         dt = max(_client_time(fleet[k], fed.local_iters_max, iters_per_epoch,
                               rng, jitter)
                  for k in range(fed.num_clients))

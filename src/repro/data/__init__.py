@@ -1,7 +1,8 @@
 from repro.data.synthetic import (SyntheticActionDataset, SyntheticLMDataset,
-                                  make_dataset_for)
+                                  make_dataset_for, stack_batches)
 from repro.data.partition import dirichlet_partition, iid_partition
 from repro.data.loader import BatchLoader
 
 __all__ = ["SyntheticActionDataset", "SyntheticLMDataset", "make_dataset_for",
-           "iid_partition", "dirichlet_partition", "BatchLoader"]
+           "stack_batches", "iid_partition", "dirichlet_partition",
+           "BatchLoader"]

@@ -113,6 +113,26 @@ class SyntheticLMDataset:
                    "labels": toks[:, 1:].astype(np.int32)}
 
 
+def stack_batches(batches, limit: int | None = None):
+    """Stack an iterable of dict batches into one pytree with leading axis H.
+
+    This is the wire format of the scan client engine
+    (``repro.core.fed_engine``): H per-iteration batches become arrays of
+    shape (H, batch, ...) so local training compiles to a single
+    ``lax.scan``. ``limit`` caps H (the simulator's per-client budget).
+    Returns None when the iterable is empty (legacy loop semantics: the
+    client returns the global model unchanged).
+    """
+    import itertools
+    # islice, not enumerate+break: the latter would pull (and waste) one
+    # batch past the limit, breaking consumption parity with the legacy
+    # ``zip(range(H), batches)`` loop on shared iterators
+    out = list(itertools.islice(batches, limit))
+    if not out:
+        return None
+    return {k: np.stack([b[k] for b in out]) for k in out[0]}
+
+
 def make_dataset_for(cfg, *, small: bool = True, seed: int = 0):
     """Dataset stand-in appropriate for a model family.
 

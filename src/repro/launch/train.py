@@ -55,6 +55,9 @@ def main(argv=None):
     ap.add_argument("--theta", type=float, default=0.01)
     ap.add_argument("--trainable", choices=["all", "last_layer"],
                     default="all")
+    ap.add_argument("--engine", choices=["scan", "loop"], default="scan",
+                    help="client execution: compiled lax.scan/vmap engine "
+                         "or the legacy per-iteration loop")
     ap.add_argument("--distill-first", action="store_true",
                     help="run a tiny teacher->student KD stage first")
     ap.add_argument("--seed", type=int, default=0)
@@ -116,7 +119,7 @@ def main(argv=None):
                 for k in range(args.clients)]
         run = simulator.run_async if args.mode == "async" \
             else simulator.run_sync
-        res = run(params, cfg, fed, fleet, data)
+        res = run(params, cfg, fed, fleet, data, engine=args.engine)
         params = res.params
         print(f"  virtual wall-clock {res.wall_clock_s:.0f}s "
               f"final loss {res.final_loss:.4f}")

@@ -6,6 +6,7 @@ weight decay (0.001 for KD, 0 for fine-tuning).
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, NamedTuple
 
 import jax
@@ -86,6 +87,31 @@ def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
 # Trainable masks — the paper fine-tunes only the final FC layer (§V-B)
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=64)
+def _mask_leaves_for(treedef, mode: str):
+    """Per-leaf 0/1 mask values, cached by (treedef, mode).
+
+    The mask depends only on the tree *structure* (key paths), which is
+    hashable — the federated hot path rebuilds masks per client run, so
+    the python tree walk is paid once per (model, mode), not per call.
+    """
+    dummy = jax.tree_util.tree_unflatten(treedef,
+                                         list(range(treedef.num_leaves)))
+    head_keys = {"fc", "lm_head", "final_norm", "enc_norm"}
+    tied = "lm_head" not in dummy and "fc" not in dummy
+    if tied:
+        head_keys = head_keys | {"embed"}
+
+    paths = jax.tree_util.tree_flatten_with_path(dummy)[0]
+
+    def leaf_mask(path_leaf):
+        path, _ = path_leaf
+        top = path[0].key if hasattr(path[0], "key") else str(path[0])
+        return 1.0 if top in head_keys else 0.0
+
+    return tuple(leaf_mask(pl) for pl in paths)
+
+
 def trainable_mask(params, mode: str = "all"):
     """Pytree of 0/1 floats. mode: 'all' | 'last_layer'.
 
@@ -96,21 +122,9 @@ def trainable_mask(params, mode: str = "all"):
         return jax.tree_util.tree_map(lambda _: 1.0, params)
     if mode != "last_layer":
         raise ValueError(mode)
-    head_keys = {"fc", "lm_head", "final_norm", "enc_norm"}
-    tied = "lm_head" not in params and "fc" not in params
-    if tied:
-        head_keys = head_keys | {"embed"}
-
-    flat = jax.tree_util.tree_flatten_with_path(params)
-    paths, treedef = flat[0], flat[1]
-
-    def leaf_mask(path_leaf):
-        path, _ = path_leaf
-        top = path[0].key if hasattr(path[0], "key") else str(path[0])
-        return 1.0 if top in head_keys else 0.0
-
+    treedef = jax.tree_util.tree_structure(params)
     return jax.tree_util.tree_unflatten(treedef,
-                                        [leaf_mask(pl) for pl in paths])
+                                        list(_mask_leaves_for(treedef, mode)))
 
 
 def apply_mask(grads, mask):

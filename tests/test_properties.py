@@ -2,6 +2,11 @@
 import math
 
 import numpy as np
+import pytest
+
+# optional dependency: without the skip, the bare import aborts the whole
+# suite at collection under ``pytest -x``
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax

@@ -66,6 +66,22 @@ def test_async_wallclock_beats_sync(tiny_setup):
     assert rs.history[-1][2] < rs.history[0][2] * 2
 
 
+def test_client_time_jitter_is_mean_preserving():
+    """lognormal(mean=-σ²/2, σ) has a mean-one multiplier: jitter must add
+    variance, not silently inflate every simulated wall-clock by
+    exp(σ²/2)."""
+    from repro.core.simulator import DeviceProfile, _client_time
+    profile = DeviceProfile("d", 100.0, upload_seconds=5.0)
+    rng = np.random.default_rng(0)
+    base = _client_time(profile, 3, 1, rng, jitter=0.0)
+    sigma = 0.5
+    draws = np.array([_client_time(profile, 3, 1, rng, jitter=sigma)
+                      for _ in range(20000)])
+    np.testing.assert_allclose(draws.mean(), base, rtol=0.02)
+    # and it really is jitter, not a constant
+    assert draws.std() > 0.1 * base
+
+
 def test_homogeneous_fleet_no_staleness_advantage():
     """With identical devices sync and async rates coincide (sanity)."""
     from repro.core.simulator import DeviceProfile

@@ -159,7 +159,11 @@ def test_batch_loader_restartable():
 def _fake_mesh():
     """AbstractMesh-like stand-in for rule tests (no 256 devices needed)."""
     from jax.sharding import AbstractMesh
-    return AbstractMesh((16, 16), ("data", "model"))
+    try:
+        return AbstractMesh((16, 16), ("data", "model"))
+    except TypeError:
+        # jax <= 0.4.x signature: a tuple of (axis_name, size) pairs
+        return AbstractMesh((("data", 16), ("model", 16)))
 
 
 def test_param_specs_divisible():
