@@ -3,15 +3,19 @@
 The simulator's fleets run *reduced* models, so per-iteration compute is
 tiny and the legacy path (one jitted ``step(...)`` dispatch + one
 ``float(loss)`` host sync per local iteration) is dispatch-bound. The scan
-engine compiles the whole H-iteration client run into one program and the
-vmap round batches all sync-round clients into one program — this bench
-measures steady-state local-training steps/sec for both paths (compile
-excluded via warmup) and reports the speedup.
+engine compiles the whole H-iteration client run into one program, the
+vmap round batches all sync-round clients into one program, and the padded
+masked-scan round batches a *heterogeneous* fleet — per-client H^k drawn
+from [H_min, H_max] — into one program as well. This bench measures
+steady-state local-training steps/sec for all paths (compile excluded via
+warmup), reports the speedups, and writes them to ``BENCH_fed_engine.json``
+so the trajectory is machine-readable.
 
     PYTHONPATH=src python -m benchmarks.run fedengine
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -28,6 +32,8 @@ BENCH_CFG = ModelConfig(name="fed-bench-tiny", family="dense", num_layers=1,
                         d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
                         vocab_size=64)
 
+ARTIFACT = "BENCH_fed_engine.json"
+
 
 def _timeit(f, iters=20):
     jax.block_until_ready(f())
@@ -38,16 +44,18 @@ def _timeit(f, iters=20):
     return (time.perf_counter() - t0) / iters
 
 
-def fed_engine_bench(H: int = 32, n_clients: int = 8):
+def fed_engine_bench(H: int = 32, n_clients: int = 8,
+                     out_json: str | None = ARTIFACT):
     print("\n== fed engine bench (legacy step-loop vs lax.scan / vmap) ==")
     cfg = BENCH_CFG
-    fed = FedConfig(num_clients=n_clients, lr=0.01, local_iters_max=3)
+    fed = FedConfig(num_clients=n_clients, lr=0.01, local_iters_min=1,
+                    local_iters_max=3)
     params = registry.init_params(jax.random.PRNGKey(0), cfg)
     ds = SyntheticLMDataset(vocab=cfg.vocab_size, seq_len=8, seed=0)
     batches = list(ds.batches(1, H, seed=7))
     stacked = stack_batches(iter(batches))
     mask = trainable_mask(params, fed.trainable)
-    rows = []
+    rows, report = [], {}
 
     # -- async client: H local iterations ------------------------------
     step, opt = fedasync.make_client_step(cfg, fed)
@@ -73,6 +81,8 @@ def fed_engine_bench(H: int = 32, n_clients: int = 8):
                  f"{H / t_scan:.0f}_steps_per_s_speedup={speedup:.2f}x"))
     print(f"  client (H={H}): loop {H / t_loop:7.0f} steps/s | "
           f"scan {H / t_scan:7.0f} steps/s | {speedup:.2f}x")
+    report["client"] = {"H": H, "loop_steps_per_s": H / t_loop,
+                        "scan_steps_per_s": H / t_scan, "speedup": speedup}
 
     # -- sync round: n_clients x H_max as one vmap program --------------
     rb = list(ds.batches(1, fed.local_iters_max, seed=11))
@@ -101,6 +111,52 @@ def fed_engine_bench(H: int = 32, n_clients: int = 8):
     print(f"  round ({n_clients} clients x H={fed.local_iters_max}): "
           f"loop {steps / t_l:7.0f} steps/s | vmap {steps / t_v:7.0f} "
           f"steps/s | {t_l / t_v:.2f}x")
+    report["round_homogeneous"] = {
+        "n_clients": n_clients, "H": fed.local_iters_max,
+        "loop_steps_per_s": steps / t_l, "vmap_steps_per_s": steps / t_v,
+        "speedup": t_l / t_v}
+
+    # -- heterogeneous round: per-client H^k in [H_min, H_max], one padded
+    #    masked-scan program (was: per-client fallback loop) -------------
+    rng_H = [fed.local_iters_min
+             + (k * 7919) % (fed.local_iters_max - fed.local_iters_min + 1)
+             for k in range(n_clients)]
+    het = [list(ds.batches(1, h, seed=100 + k))
+           for k, h in enumerate(rng_H)]
+    het_steps = sum(rng_H)
+
+    def loop_het():
+        g, _ = fedavg.fedavg_round_loop(params, [iter(b) for b in het],
+                                        cfg, fed, step=step, opt=opt,
+                                        mask=mask)
+        return g
+
+    def padded_het():
+        g, _ = fedavg.fedavg_round(params, [iter(b) for b in het],
+                                   cfg, fed, engine=round_engine, mask=mask)
+        return g
+
+    t_hl = _timeit(loop_het, iters=10)
+    t_hp = _timeit(padded_het, iters=10)
+    rows.append(("fed_round_het_loop", t_hl / het_steps * 1e6,
+                 f"{het_steps / t_hl:.0f}_steps_per_s"))
+    rows.append(("fed_round_het_padded", t_hp / het_steps * 1e6,
+                 f"{het_steps / t_hp:.0f}_steps_per_s_"
+                 f"speedup={t_hl / t_hp:.2f}x"))
+    print(f"  het round ({n_clients} clients, H^k={rng_H}): "
+          f"loop {het_steps / t_hl:7.0f} steps/s | padded "
+          f"{het_steps / t_hp:7.0f} steps/s | {t_hl / t_hp:.2f}x")
+    report["round_heterogeneous"] = {
+        "n_clients": n_clients, "H_per_client": rng_H,
+        "loop_steps_per_s": het_steps / t_hl,
+        "padded_steps_per_s": het_steps / t_hp,
+        "speedup": t_hl / t_hp}
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"  wrote {out_json}")
+        return rows, [out_json]
     return rows
 
 

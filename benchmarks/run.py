@@ -3,6 +3,12 @@
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run table2 roofline
+
+A bench may return ``(rows, artifact_paths)`` instead of plain rows to
+register machine-readable outputs (e.g. ``fedengine`` writes
+``BENCH_fed_engine.json`` with loop vs homogeneous-vmap vs
+padded-heterogeneous-vmap round steps/sec); artifacts are listed after
+the CSV.
 """
 import sys
 
@@ -27,12 +33,18 @@ ALL = {
 
 def main() -> None:
     which = sys.argv[1:] or list(ALL)
-    rows = []
+    rows, artifacts = [], []
     for name in which:
-        rows.extend(ALL[name]() or [])
+        out = ALL[name]() or []
+        if isinstance(out, tuple):       # (rows, artifact_paths)
+            out, paths = out
+            artifacts.extend(paths)
+        rows.extend(out)
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    for p in artifacts:
+        print(f"artifact: {p}")
 
 
 if __name__ == '__main__':

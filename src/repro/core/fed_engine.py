@@ -9,14 +9,35 @@ per-iteration host syncs) and, for synchronous rounds, runs *all* clients as
 one batched program with ``jax.vmap`` (the global anchor broadcasts; the
 per-client batch stacks carry a leading client axis).
 
-Compilation is cached per ``(H, trainable)``: the simulator assigns each
-device a static local-iteration budget H^k ∈ [H_min, H_max], so a
-heterogeneous fleet triggers at most ``H_max - H_min + 1`` compiles and then
-runs compile-free. The legacy loop remains in place as a parity oracle
+Heterogeneous fleets — the paper's whole point: each device k gets its own
+local-iteration budget H^k ∈ [H_min, H_max] — batch through the *padded*
+path: every client's batch stack is zero-padded to a common H_max
+(``pad_client_batches``) and a per-client iteration count threads through
+the scan body as a mask; steps with index ≥ H^k are identity on the
+(params, opt_state) carry and emit NaN losses. H^k arrives as a *traced*
+int32 vector, so the compile cache holds ONE entry per round shape
+``(n_clients, H_max, batch...)`` instead of one per distinct H — a fleet
+drawing H^k from [H_min, H_max] compiles once and runs compile-free.
+
+``ShardedSyncRound`` additionally splits the client axis of the padded
+round over a device mesh (``launch.mesh.make_fleet_mesh``,
+``sharding.specs.fed_round_specs``) with ``shard_map``: each shard runs its
+local clients' scans and the weighted average reduces with ``psum``.
+
+Buffer donation (``jax.jit(..., donate_argnums)``): callers that own their
+inputs hand them to XLA for in-place reuse. The engine donates the batch
+stacks whenever it built them itself, and — on explicit
+``donate_params=True`` — the old global params, whose buffers the new
+global aliases exactly (the scan carry starts from them); ``run_sync``
+uses this from the second round on, when the previous round's output is
+provably dead. See docs/fed_engine.md.
+
+The legacy loop remains in place as a parity oracle
 (tests/test_fed_engine.py checks float32 agreement).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Sequence
 
 import numpy as np
@@ -34,8 +55,9 @@ def stack_client_batches(client_batch_stacks: Sequence[Any]):
     with a leading client axis (n_clients, H, ...) for the vmap round.
 
     All clients must share the same H and batch shapes (homogeneous sync
-    round); raises ValueError otherwise so callers can fall back to the
-    per-client loop.
+    round); raises ValueError otherwise — heterogeneous fleets batch
+    through ``pad_client_batches``, which pads per-client H to a common
+    H_max and returns the iteration mask for the padded scan.
     """
     if not client_batch_stacks:
         raise ValueError("no client batch stacks")
@@ -45,14 +67,115 @@ def stack_client_batches(client_batch_stacks: Sequence[Any]):
     ]
     if any(s != shapes[0] for s in shapes[1:]):
         raise ValueError(
-            f"heterogeneous client batch stacks {shapes}; the vmap round "
-            "needs a homogeneous fleet — use the per-client loop instead")
+            f"heterogeneous client batch stacks {shapes}; use "
+            "pad_client_batches to pad per-client H to a common H_max and "
+            "run the padded masked-scan round (one batched program)")
     return jax.tree_util.tree_map(
         lambda *leaves: np.stack(leaves), *client_batch_stacks)
 
 
+def pad_client_batches(client_batch_stacks: Sequence[Any],
+                       H_max: int | None = None):
+    """Pad per-client batch stacks (each leaf (H^k, ...)) to a common H_max
+    and stack to (n_clients, H_max, ...).
+
+    Returns ``(stacked, iters)`` where ``iters`` is an int32 array of the
+    true per-client iteration counts H^k — the scan mask. Padding is
+    zeros: the masked scan computes a (discarded) step on pad batches, so
+    their contents never reach the model update. Clients may be empty
+    (H^k = 0, ``None`` or zero-length stacks) as long as one client has a
+    batch to take shapes from. Trailing (per-batch) shapes and dtypes must
+    agree across clients; raises ValueError otherwise — that raggedness
+    needs the per-client fallback, not padding.
+    """
+    if not client_batch_stacks:
+        raise ValueError("no client batch stacks")
+    lens = [(0 if s is None else
+             int(jax.tree_util.tree_leaves(s)[0].shape[0])
+             if jax.tree_util.tree_leaves(s) else 0)
+            for s in client_batch_stacks]
+    ref = next((s for s, h in zip(client_batch_stacks, lens) if h), None)
+    if ref is None:
+        raise ValueError("all clients empty; nothing to pad from")
+    if H_max is None:
+        H_max = max(lens)
+    if max(lens) > H_max:
+        raise ValueError(f"client iteration counts {lens} exceed "
+                         f"H_max={H_max}")
+    ref_flat, treedef = jax.tree_util.tree_flatten(ref)
+    trailing = [(tuple(l.shape[1:]), np.asarray(l).dtype) for l in ref_flat]
+
+    padded = []
+    for s, h in zip(client_batch_stacks, lens):
+        if h == 0:
+            flat = [np.zeros((H_max,) + shp, dt) for shp, dt in trailing]
+            padded.append(jax.tree_util.tree_unflatten(treedef, flat))
+            continue
+        if jax.tree_util.tree_structure(s) != treedef:
+            raise ValueError(
+                "client batch stacks disagree on pytree structure (keys); "
+                "matching leaf shapes cannot substitute for matching keys")
+        flat = [np.asarray(l) for l in jax.tree_util.tree_leaves(s)]
+        if [(tuple(l.shape[1:]), l.dtype) for l in flat] != trailing:
+            raise ValueError(
+                "client batch stacks disagree on per-batch shapes/dtypes; "
+                "padding only evens out iteration counts — use the "
+                "per-client fallback for truly ragged batches")
+        pad = H_max - h
+        if pad:
+            flat = [np.concatenate(
+                [l, np.zeros((pad,) + l.shape[1:], l.dtype)]) for l in flat]
+        padded.append(jax.tree_util.tree_unflatten(treedef, flat))
+    stacked = jax.tree_util.tree_map(
+        lambda *leaves: np.stack(leaves), *padded)
+    return stacked, np.asarray(lens, np.int32)
+
+
 def _batch_len(stacked) -> int:
     return int(jax.tree_util.tree_leaves(stacked)[0].shape[0])
+
+
+def _full_iters(stacked_clients):
+    """(n,) iteration vector for 'every client runs the whole stack'."""
+    n, H = jax.tree_util.tree_leaves(stacked_clients)[0].shape[:2]
+    return np.full((int(n),), int(H), np.int32)
+
+
+def _pad_H(fed: FedConfig, client_stacks) -> int:
+    """Pad target: the config's H_max, stretched if a caller handed in a
+    longer stack — constant across rounds, so the padded program's shape
+    (and compile-cache entry) stays stable whatever H^k is drawn."""
+    return max(fed.local_iters_max,
+               max((_batch_len(s) for s in client_stacks
+                    if s is not None), default=0))
+
+
+class _JitCache:
+    """Per-engine pool of jit wrappers keyed by (entry point, donated
+    argnums). Donation variants compile separately, so they are built
+    lazily — an engine that never donates never pays the extra trace.
+    Integer batch leaves (LM tokens) can never alias the float outputs;
+    XLA's "donated buffers were not usable" note for them is suppressed,
+    it is informational and expected.
+    """
+
+    def __init__(self):
+        self._jits: dict = {}
+
+    def call(self, name, fn, donate: tuple, args):
+        key = (name, donate)
+        if key not in self._jits:
+            self._jits[key] = jax.jit(fn, donate_argnums=donate)
+        if not donate:
+            return self._jits[key](*args)
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            return self._jits[key](*args)
+
+    @property
+    def num_compiled(self) -> int:
+        return sum(j._cache_size() for j in self._jits.values())
 
 
 class ClientRun:
@@ -62,6 +185,12 @@ class ClientRun:
     where ``stacked`` is a batch pytree with leading axis H (see
     ``repro.data.stack_batches``) and ``losses`` is a device array of shape
     (H,) — the only host sync the caller pays is reading it.
+
+    ``run_batch(params_global, client_stacks, iters)`` is the padded
+    batched variant: many clients with *different* H^k run as one vmapped
+    masked-scan program, returning per-client ``(w_news, losses)`` with
+    leading client axes (no aggregation — the async simulator uses this to
+    batch concurrent dispatches; ``SyncRound`` adds the weighted average).
     """
 
     def __init__(self, cfg: ModelConfig, fed: FedConfig, loss_kwargs=None):
@@ -69,7 +198,7 @@ class ClientRun:
         self.fed = fed
         self.loss_kwargs = dict(loss_kwargs or {})
         self.opt = sgd(fed.lr, fed.momentum, fed.weight_decay)
-        self._jit_run = jax.jit(self._run)
+        self._jits = _JitCache()
 
     # -- pure (unjitted) core, reused by the vmap round ------------------
     def _task_loss(self, params, batch):
@@ -91,29 +220,92 @@ class ClientRun:
         (w_new, _), losses = jax.lax.scan(body, init, stacked)
         return w_new, losses
 
+    def _run_padded(self, params_global, stacked, n_iters, mask):
+        """Masked scan over an H_max-padded stack: steps with index >=
+        ``n_iters`` (a traced int32 scalar) are identity on the carry and
+        emit NaN. H^k therefore never enters the compile key — one program
+        covers every iteration budget at this pad length."""
+        anchor = params_global
+
+        def body(carry, xs):
+            i, batch = xs
+            params, opt_state = carry
+            loss, grads = jax.value_and_grad(self._task_loss)(params, batch)
+            grads = proximal_grad(grads, params, anchor, self.fed.prox_theta)
+            grads = apply_mask(grads, mask)
+            new_params, new_opt = self.opt.update(grads, opt_state, params)
+            active = i < n_iters
+            params, opt_state = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(active, new, old),
+                (new_params, new_opt), (params, opt_state))
+            return (params, opt_state), jnp.where(active, loss, jnp.nan)
+
+        H = _batch_len(stacked)
+        init = (params_global, self.opt.init(params_global))
+        (w_new, _), losses = jax.lax.scan(
+            body, init, (jnp.arange(H, dtype=jnp.int32), stacked))
+        return w_new, losses
+
+    def _run_padded_batch(self, params_global, stacked_clients, iters, mask):
+        return jax.vmap(
+            lambda s, n: self._run_padded(params_global, s, n, mask)
+        )(stacked_clients, iters)
+
     @property
     def num_compiled(self) -> int:
-        """Distinct programs actually traced: H is the scan length (a
-        static shape), so the jit wrapper compiles once per distinct H
-        (trainable is fixed per engine; see ``_engine_key``) and then
-        dispatches compile-free."""
-        return self._jit_run._cache_size()
+        """Distinct programs actually traced across this engine's entry
+        points. For the unpadded path H is the scan length (a static
+        shape): one compile per distinct H. For the padded path H^k is a
+        traced argument: one compile per (n_clients, H_max) round shape
+        regardless of the H vector."""
+        return self._jits.num_compiled
 
-    def __call__(self, params_global, stacked, mask=None):
+    def __call__(self, params_global, stacked, mask=None, donate=False):
+        """``donate=True`` hands ``stacked``'s buffers to XLA — only safe
+        when the caller will not touch them again (fresh stack per call)."""
         if mask is None:
             mask = trainable_mask(params_global, self.fed.trainable)
-        return self._jit_run(params_global, stacked, mask)
+        return self._jits.call("run", self._run, (1,) if donate else (),
+                               (params_global, stacked, mask))
+
+    def run_batch(self, params_global, client_stacks, iters=None, mask=None,
+                  donate=None):
+        """Batched padded execution of many clients with per-client H^k.
+
+        ``client_stacks``: a sequence of per-client stacked batch pytrees
+        (padded here via ``pad_client_batches``; the pad copy is engine-
+        owned, so it is donated) or an already client-stacked pytree with
+        (n_clients, H_max, ...) leaves plus an explicit ``iters``. Returns
+        ``(w_news, losses)`` with leading client axes; ``losses`` rows are
+        NaN beyond each client's H^k.
+        """
+        if isinstance(client_stacks, (list, tuple)):
+            client_stacks, lens = pad_client_batches(
+                client_stacks, H_max=_pad_H(self.fed, client_stacks))
+            if iters is None:
+                iters = lens
+            if donate is None:
+                donate = True
+        if iters is None:
+            iters = _full_iters(client_stacks)
+        if mask is None:
+            mask = trainable_mask(params_global, self.fed.trainable)
+        return self._jits.call(
+            "batch", self._run_padded_batch, (1,) if donate else (),
+            (params_global, client_stacks, jnp.asarray(iters, jnp.int32),
+             mask))
 
 
 _ENGINE_CACHE: dict = {}
 _ENGINE_CACHE_MAX = 32      # FIFO-bounded: engines hold compiled executables
 
 
-def _engine_key(kind: str, cfg: ModelConfig, fed: FedConfig, loss_kwargs):
+def _engine_key(kind, cfg: ModelConfig, fed: FedConfig, loss_kwargs):
     """Cache key over the fields that affect the compiled client program.
 
     Server-side knobs (mixing_beta, staleness_a, ...) don't — two sweeps
-    differing only in staleness must share compiled engines.
+    differing only in staleness must share compiled engines. ``kind`` may
+    carry extra identity (e.g. the sharded round's Mesh).
     """
     lk = tuple(sorted((loss_kwargs or {}).items()))
     key = (kind, cfg, fed.lr, fed.momentum, fed.weight_decay,
@@ -147,13 +339,29 @@ def make_client_run(cfg: ModelConfig, fed: FedConfig,
                           lambda: ClientRun(cfg, fed, loss_kwargs))
 
 
+def _weighted_params(w_news, weights, params_global):
+    """einsum over the client axis, accumulated in f32, cast back."""
+    return jax.tree_util.tree_map(
+        lambda l, p: jnp.einsum(
+            "c,c...->...", weights,
+            l.astype(jnp.float32)).astype(p.dtype),
+        w_news, params_global)
+
+
 class SyncRound:
     """vmap-over-clients FedAvg round: one batched program per round.
 
-    ``round(params_global, client_stacks, weights, mask=None)`` ->
-    ``(new_global, losses (n_clients, H))``. ``client_stacks`` is either a
-    sequence of per-client stacked batch pytrees (stacked here) or an
-    already client-stacked pytree with leading (n_clients, H) axes.
+    ``round(params_global, client_stacks, weights, mask=None, iters=None)``
+    -> ``(new_global, losses (n_clients, H))``. ``client_stacks`` is either
+    a sequence of per-client stacked batch pytrees (stacked — or, when
+    their H^k differ, padded — here) or an already client-stacked pytree
+    with leading (n_clients, H) axes. With ``iters`` the padded masked-scan
+    program runs: per-client H^k as a traced vector, one compile per round
+    shape, NaN losses past each client's budget.
+
+    ``donate_params=True`` additionally donates the old global params —
+    the new global aliases their buffers exactly — and must only be set
+    by callers that will never touch the passed-in params again.
     """
 
     def __init__(self, cfg: ModelConfig, fed: FedConfig, loss_kwargs=None):
@@ -161,37 +369,66 @@ class SyncRound:
         # and the sync round's inner scan then reuse one trace cache
         self.client = make_client_run(cfg, fed, loss_kwargs)
         self.fed = fed
-        self._jit_rnd = jax.jit(self._rnd)
+        self._jits = _JitCache()
 
     def _rnd(self, params_global, stacked_clients, weights, mask):
         # anchor (and mask) broadcast; batch stacks are per-client
         w_news, losses = jax.vmap(
             lambda s: self.client._run(params_global, s, mask)
         )(stacked_clients)
-        new = jax.tree_util.tree_map(
-            lambda l, p: jnp.einsum(
-                "c,c...->...", weights,
-                l.astype(jnp.float32)).astype(p.dtype),
-            w_news, params_global)
-        return new, losses
+        return _weighted_params(w_news, weights, params_global), losses
+
+    def _rnd_padded(self, params_global, stacked_clients, weights, iters,
+                    mask):
+        w_news, losses = self.client._run_padded_batch(
+            params_global, stacked_clients, iters, mask)
+        return _weighted_params(w_news, weights, params_global), losses
 
     @property
     def num_compiled(self) -> int:
-        """Distinct traced programs — one per (n_clients, H) shape."""
-        return self._jit_rnd._cache_size()
+        """Distinct traced programs — one per (n_clients, H) round shape
+        (the padded path's H^k vector is traced, not a compile key)."""
+        return self._jits.num_compiled
 
-    def __call__(self, params_global, client_stacks, weights=None,
-                 mask=None):
+    def _prep(self, params_global, client_stacks, weights, mask, iters,
+              donate):
         if isinstance(client_stacks, (list, tuple)):
-            client_stacks = stack_client_batches(client_stacks)
-        n = int(jax.tree_util.tree_leaves(client_stacks)[0].shape[0])
+            try:
+                client_stacks = stack_client_batches(client_stacks)
+            except ValueError:
+                client_stacks, lens = pad_client_batches(
+                    client_stacks, H_max=_pad_H(self.fed, client_stacks))
+                if iters is None:   # caller-supplied H^k wins over lens
+                    iters = lens
+            if donate is None:
+                donate = True    # the stack was built here; caller never
+        n = _batch_len(client_stacks)    # sees it, so XLA may reuse it
         if weights is None:
             weights = jnp.full((n,), 1.0 / n, jnp.float32)
         else:
             weights = jnp.asarray(weights, jnp.float32)
         if mask is None:
             mask = trainable_mask(params_global, self.fed.trainable)
-        return self._jit_rnd(params_global, client_stacks, weights, mask)
+        return client_stacks, weights, mask, iters, bool(donate), n
+
+    @staticmethod
+    def _donated(donate, donate_params):
+        return ((0,) if donate_params else ()) + ((1,) if donate else ())
+
+    def __call__(self, params_global, client_stacks, weights=None,
+                 mask=None, iters=None, donate=None,
+                 donate_params: bool = False):
+        client_stacks, weights, mask, iters, donate, _ = self._prep(
+            params_global, client_stacks, weights, mask, iters, donate)
+        argnums = self._donated(donate, donate_params)
+        if iters is None:
+            return self._jits.call(
+                "rnd", self._rnd, argnums,
+                (params_global, client_stacks, weights, mask))
+        return self._jits.call(
+            "pad", self._rnd_padded, argnums,
+            (params_global, client_stacks, weights,
+             jnp.asarray(iters, jnp.int32), mask))
 
 
 def make_sync_round(cfg: ModelConfig, fed: FedConfig,
@@ -202,3 +439,82 @@ def make_sync_round(cfg: ModelConfig, fed: FedConfig,
     """
     return _cached_engine("sync", cfg, fed, loss_kwargs,
                           lambda: SyncRound(cfg, fed, loss_kwargs))
+
+
+class ShardedSyncRound(SyncRound):
+    """Padded sync round sharded over a device mesh with ``shard_map``.
+
+    The client axis splits across the mesh's ``'clients'`` axis
+    (``launch.mesh.make_fleet_mesh``; specs from
+    ``sharding.specs.fed_round_specs``): each shard scans its local
+    clients under ``vmap``, reduces its weight-scaled parameter sum, and
+    the global weighted average forms with ``psum``. Params and mask
+    replicate; batch stacks, weights, and the H^k vector shard on the
+    leading client axis. When n_clients does not divide the axis size the
+    round pads with zero-weight, zero-iteration dummy clients and slices
+    their losses back off.
+    """
+
+    def __init__(self, cfg: ModelConfig, fed: FedConfig, mesh,
+                 loss_kwargs=None):
+        from repro.sharding import specs as sh
+        super().__init__(cfg, fed, loss_kwargs)
+        self.mesh = mesh
+        self._specs = sh.fed_round_specs(mesh)
+        axis = self._specs["axis"]
+
+        def shard_fn(params_global, stacked_shard, w_shard, it_shard, mask):
+            w_news, losses = self.client._run_padded_batch(
+                params_global, stacked_shard, it_shard, mask)
+            partial = jax.tree_util.tree_map(
+                lambda l: jnp.einsum("c,c...->...", w_shard,
+                                     l.astype(jnp.float32)), w_news)
+            total = jax.lax.psum(partial, axis)
+            new = jax.tree_util.tree_map(
+                lambda t, p: t.astype(p.dtype), total, params_global)
+            return new, losses
+
+        c, r = self._specs["clients"], self._specs["replicated"]
+        self._sharded_rnd = sh.shard_map(
+            shard_fn, mesh=mesh, in_specs=(r, c, c, c, r),
+            out_specs=(r, c))
+
+    def __call__(self, params_global, client_stacks, weights=None,
+                 mask=None, iters=None, donate=None,
+                 donate_params: bool = False):
+        client_stacks, weights, mask, iters, donate, n = self._prep(
+            params_global, client_stacks, weights, mask, iters, donate)
+        if iters is None:        # homogeneous: every client runs full H
+            iters = _full_iters(client_stacks)
+        iters = np.asarray(iters, np.int32)
+        n_shards = self.mesh.shape[self._specs["axis"]]
+        pad = (-n) % n_shards
+        if pad:                  # zero-weight dummies round the axis up
+            client_stacks = jax.tree_util.tree_map(
+                lambda l: np.concatenate(
+                    [np.asarray(l)] + [np.asarray(l[:1])] * pad),
+                client_stacks)
+            weights = jnp.concatenate(
+                [weights, jnp.zeros((pad,), jnp.float32)])
+            iters = np.concatenate([iters, np.zeros((pad,), np.int32)])
+        new, losses = self._jits.call(
+            "shard", self._sharded_rnd,
+            self._donated(donate, donate_params),
+            (params_global, client_stacks, weights,
+             jnp.asarray(iters, jnp.int32), mask))
+        return new, losses[:n]
+
+
+def make_sharded_sync_round(cfg: ModelConfig, fed: FedConfig, mesh=None,
+                            loss_kwargs=None) -> ShardedSyncRound:
+    """Sync-round engine whose client axis is split over ``mesh`` (default:
+    this host's whole device set as a 1-D ``('clients',)`` mesh).
+
+    Memoized like ``make_sync_round`` with the mesh folded into the key.
+    """
+    if mesh is None:
+        from repro.launch.mesh import make_fleet_mesh
+        mesh = make_fleet_mesh()
+    return _cached_engine(
+        ("shard", mesh), cfg, fed, loss_kwargs,
+        lambda: ShardedSyncRound(cfg, fed, mesh, loss_kwargs))

@@ -9,6 +9,13 @@ SGD iterations on g_{w_t}(w; d) = l(w; d) + (θ/2)||w - w_t||².
 
 Both halves are jitted pure functions; the asynchronous event order is
 driven by core/simulator.py (or a real multi-pod launcher).
+
+This module is the *reference* implementation: one jitted step per local
+iteration, one server mix per receive. The compiled hot path lives in
+``core/fed_engine.py`` — H iterations fuse into one ``lax.scan`` program,
+concurrent dispatches with per-client H^k batch into one padded vmap
+program (docs/fed_engine.md) — and is tested for float32 parity against
+the loops here.
 """
 from __future__ import annotations
 
@@ -120,8 +127,11 @@ def client_update(params_global, t: int, batches, cfg: ModelConfig,
 
     This is the legacy per-iteration dispatch loop (one jitted step + one
     ``float(loss)`` host sync per iteration). The compiled hot path lives
-    in ``repro.core.fed_engine`` (lax.scan / vmap); this loop is kept as
-    the parity oracle the engine is tested against.
+    in ``repro.core.fed_engine``: ``ClientRun`` for one client's scan,
+    ``ClientRun.run_batch`` for many clients with per-client ``num_iters``
+    (padded masked scan under vmap). This loop is kept as the parity
+    oracle those programs are tested against — including per-client H^k,
+    where the oracle is simply this loop called once per client.
     """
     if step is None:
         step, opt = make_client_step(cfg, fed)

@@ -7,10 +7,15 @@ removes).
 
 ``fedavg_round`` runs the whole round as ONE batched program: client batch
 stacks get a leading client axis and ``jax.vmap`` maps the scan-compiled
-local training over it (see core/fed_engine.py), so a homogeneous sync
-round costs a single dispatch instead of n_clients × H jitted steps plus
-n_clients × H host syncs. ``fedavg_round_loop`` is the legacy per-client
-Python loop, kept as the parity oracle.
+local training over it (see core/fed_engine.py), so a sync round costs a
+single dispatch instead of n_clients × H jitted steps plus n_clients × H
+host syncs. Heterogeneous fleets — clients with different iteration
+budgets H^k, including clients that ran out of data — batch too: their
+stacks zero-pad to a common H_max and the engine's per-client iteration
+mask makes padded steps identity (docs/fed_engine.md). Only clients whose
+*batch shapes* disagree drop to the per-client fallback.
+``fedavg_round_loop`` is the legacy per-client Python loop, kept as the
+parity oracle.
 """
 from __future__ import annotations
 
@@ -48,59 +53,102 @@ def _client_weights(n: int, data_sizes: Sequence[int] | None):
 
 def fedavg_round(params_global, client_batches: Sequence, cfg: ModelConfig,
                  fed: FedConfig, engine: fed_engine.SyncRound | None = None,
-                 mask=None, data_sizes: Sequence[int] | None = None):
+                 mask=None, data_sizes: Sequence[int] | None = None,
+                 donate_params: bool = False):
     """One synchronous round as a single vmap-batched program.
 
     ``client_batches``: per-client iterable of batches (the legacy
-    contract); each is stacked to H = fed.local_iters_max iterations and
-    all clients run together. Returns (new_global_params,
-    per_client_losses) with losses as lists of floats, matching the loop
-    oracle. The vmap program needs a homogeneous fleet — ragged clients
-    (out of data, or batch shapes that don't stack) drop to a per-client
-    fallback; see ``_ragged_fallback``.
+    contract); each is stacked to at most H = fed.local_iters_max
+    iterations and all clients run together. Returns
+    (new_global_params, per_client_losses) with losses as lists of floats
+    (length H^k per client), matching the loop oracle. A homogeneous fleet
+    takes the plain vmap path; clients with *different batch counts* H^k
+    (including zero — out of data) pad to H_max and run the masked-scan
+    path. Only batch shapes that disagree within or across clients drop to
+    the per-client fallback; see ``_ragged_fallback``.
+
+    ``donate_params=True`` lets the engine alias the new global onto
+    ``params_global``'s buffers — only pass it when the caller will never
+    use ``params_global`` again (e.g. round r > 0 of a training loop).
     """
     # materialize up to H batches per client first: iterators may be
     # generators, so raggedness must be detected before anything is lost
     client_lists = [list(itertools.islice(b, fed.local_iters_max))
                     for b in client_batches]
-    if client_lists and _is_homogeneous(client_lists):
-        # stack straight to (n_clients, H, ...) — one host copy, not a
-        # per-client stack followed by a cross-client restack
-        keys = list(client_lists[0][0])
-        stacked_clients = {
-            k: np.stack([[b[k] for b in bl] for bl in client_lists])
-            for k in keys}
-        if engine is None:
-            engine = fed_engine.make_sync_round(cfg, fed)
-        weights = _client_weights(len(client_lists), data_sizes)
-        new_global, losses = engine(params_global, stacked_clients,
-                                    weights=weights, mask=mask)
-        return new_global, [[float(x) for x in row]
-                            for row in np.asarray(losses)]
+    # one signature scan decides all three paths: a single shared batch
+    # signature is the batched programs' precondition; equal non-zero
+    # counts additionally allow the mask-free homogeneous program
+    sigs = {_batch_sig(b) for bl in client_lists for b in bl}
+    counts = [len(bl) for bl in client_lists]
+    if client_lists and len(sigs) == 1:
+        if min(counts) == max(counts) > 0:
+            # stack straight to (n_clients, H, ...) — one host copy, not
+            # a per-client stack followed by a cross-client restack
+            keys = list(client_lists[0][0])
+            stacked_clients = {
+                k: np.stack([[b[k] for b in bl] for bl in client_lists])
+                for k in keys}
+            if engine is None:
+                engine = fed_engine.make_sync_round(cfg, fed)
+            weights = _client_weights(len(client_lists), data_sizes)
+            new_global, losses = engine(params_global, stacked_clients,
+                                        weights=weights, mask=mask,
+                                        donate=True,
+                                        donate_params=donate_params)
+            return new_global, [[float(x) for x in row]
+                                for row in np.asarray(losses)]
+        return _padded_round(params_global, client_lists, cfg, fed,
+                             engine, mask, data_sizes, donate_params)
     return _ragged_fallback(params_global, client_lists, cfg, fed,
                             engine, mask, data_sizes)
 
 
-def _is_homogeneous(client_lists) -> bool:
-    """True when every client has the same non-zero batch count and every
-    batch shares keys/shapes/dtypes — the vmap program's precondition."""
-    first = client_lists[0]
-    if not first or any(len(bl) != len(first) for bl in client_lists):
-        return False
+def _batch_sig(b):
+    return tuple(sorted((k, np.shape(v), str(np.asarray(v).dtype))
+                        for k, v in b.items()))
 
-    def sig(b):
-        return tuple(sorted((k, np.shape(v), str(np.asarray(v).dtype))
-                            for k, v in b.items()))
 
-    ref = sig(first[0])
-    return all(sig(b) == ref for bl in client_lists for b in bl)
+def _padded_round(params_global, client_lists, cfg, fed, engine, mask,
+                  data_sizes, donate_params=False):
+    """Heterogeneous-H round as one padded masked-scan program.
+
+    Batches write straight into one zero-initialized (n_clients, H_max,
+    ...) array per key — a single host copy, mirroring the homogeneous
+    branch — and the engine threads the true H^k vector through the scan
+    mask: one compiled program per round shape, whatever the H^k draw.
+    Empty clients run zero iterations and contribute the unchanged global
+    to the weighted average, matching the loop oracle. Zero pad rows are
+    what the mask discards, so their contents never matter.
+    """
+    ref = next(b for bl in client_lists for b in bl)
+    n = len(client_lists)
+    H_max = max(fed.local_iters_max, max(len(bl) for bl in client_lists))
+    iters = np.asarray([len(bl) for bl in client_lists], np.int32)
+    stacked = {}
+    for k, v in ref.items():
+        out = np.zeros((n, H_max) + np.shape(v), np.asarray(v).dtype)
+        for c, bl in enumerate(client_lists):
+            for i, b in enumerate(bl):
+                out[c, i] = b[k]
+        stacked[k] = out
+    if engine is None:
+        engine = fed_engine.make_sync_round(cfg, fed)
+    weights = _client_weights(n, data_sizes)
+    new_global, losses = engine(params_global, stacked, weights=weights,
+                                mask=mask, iters=iters, donate=True,
+                                donate_params=donate_params)
+    losses = np.asarray(losses)
+    return new_global, [[float(x) for x in row[:h]]
+                        for row, h in zip(losses, iters)]
 
 
 def _ragged_fallback(params_global, client_lists, cfg, fed, engine,
                      mask, data_sizes):
-    """Per-client runs + weighted average when the vmap program can't form:
-    stackable clients use the scan engine, within-client-ragged ones drop
-    to the per-iteration step loop, empty ones return the global model."""
+    """Per-client runs + weighted average when no batched program can form
+    (batch *shapes* disagree — count-only raggedness takes
+    ``_padded_round``): stackable clients use the scan engine,
+    within-client-ragged ones drop to the per-iteration step loop, empty
+    ones return the global model."""
     # reuse the round engine's client (and its compile cache) if provided —
     # a fresh ClientRun per round would recompile every call
     run = engine.client if engine is not None \

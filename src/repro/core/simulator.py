@@ -18,6 +18,9 @@ from typing import Callable, Iterable, Optional, Sequence
 
 import numpy as np
 
+import jax
+import jax.numpy as jnp
+
 from repro.core import fed_engine, fedasync, fedavg
 from repro.core.fedasync import ServerState, server_receive
 from repro.data.synthetic import stack_batches
@@ -106,9 +109,13 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
 
     ``engine``: "scan" (default) runs each client's H local iterations as
     one compiled ``lax.scan`` program (core/fed_engine.py) — one dispatch
-    and one host sync per *update* instead of per *iteration*. "loop" is
-    the legacy per-iteration path, kept as a parity oracle. The
-    event-driven virtual clock is identical under both.
+    and one host sync per *update* instead of per *iteration* — and
+    batches *concurrent* dispatches (the initial fleet-wide kickoff, or
+    any burst sharing one server state) into a single padded vmap program
+    even though each client has its own H^k: stacks pad to H_max and the
+    engine's iteration mask absorbs the difference. "loop" is the legacy
+    per-iteration path, kept as a parity oracle. The event-driven virtual
+    clock is identical under both.
     """
     assert len(fleet) == len(client_data) == fed.num_clients
     assert engine in ("scan", "loop"), engine
@@ -136,34 +143,69 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
     staleness_hist: dict = {}
     seq = 0
 
-    def dispatch(k: int, now: float):
+    def _run_clients(ks):
+        """Local training for clients ``ks`` from the *current* server
+        model. Returns {k: (w_new, losses)}. Concurrent scan dispatches
+        batch as one padded program; the per-client path covers the rest
+        (single dispatches, the loop oracle, batches that won't pad)."""
+        results = {}
+        if engine == "scan":
+            stacks = {k: stack_batches(client_data[k](), limit=H[k])
+                      for k in ks}
+            live = [k for k in ks if stacks[k] is not None]
+            if len(live) > 1:
+                try:
+                    padded, iters = fed_engine.pad_client_batches(
+                        [stacks[k] for k in live],
+                        H_max=fed.local_iters_max)
+                except ValueError:        # shapes disagree across clients
+                    padded = None
+                if padded is not None:
+                    w_news, loss_arr = run.run_batch(
+                        server.params, padded, iters, mask=mask,
+                        donate=True)
+                    la = np.asarray(loss_arr)    # single host sync
+                    for j, k in enumerate(live):
+                        w = jax.tree_util.tree_map(lambda a, j=j: a[j],
+                                                   w_news)
+                        results[k] = (w, [float(la[j, iters[j] - 1])])
+            for k in ks:
+                if k in results:
+                    continue
+                if stacks[k] is None:            # client out of data
+                    results[k] = (server.params, [])
+                else:
+                    w_new, loss_arr = run(server.params, stacks[k],
+                                          mask=mask, donate=True)
+                    results[k] = (w_new, [float(loss_arr[-1])])
+        else:
+            for k in ks:
+                w_new, _, losses = fedasync.client_update(
+                    server.params, server.t, client_data[k](), cfg, fed,
+                    step=step, opt=opt, mask=mask, num_iters=H[k])
+                results[k] = (w_new, losses)
+        return results
+
+    def dispatch(ks, now: float):
         nonlocal seq
         tau = server.t
         # run the local training NOW (numerically); finish time is virtual
-        if engine == "scan":
-            stacked = stack_batches(client_data[k](), limit=H[k])
-            if stacked is None:           # client out of data
-                w_new, losses = server.params, []
-            else:
-                w_new, loss_arr = run(server.params, stacked, mask=mask)
-                losses = [float(loss_arr[-1])]   # single host sync
-        else:
-            w_new, _, losses = fedasync.client_update(
-                server.params, tau, client_data[k](), cfg, fed, step=step,
-                opt=opt, mask=mask, num_iters=H[k])
-        if fed.compress_bits:
-            # int8 delta on the wire; server reconstructs against the
-            # anchor it handed out (communication-efficient FL, §II)
-            from repro.core.compression import roundtrip
-            w_new, _ = roundtrip(w_new, server.params, fed.compress_bits)
-        dt = _client_time(fleet[k], H[k], iters_per_epoch, rng, jitter)
-        heapq.heappush(events, (now + dt, seq, k, w_new, tau,
-                                losses[-1] if losses else math.nan))
-        seq += 1
-        trace.append(TraceEvent(now, "dispatch", k, tau))
+        results = _run_clients(ks)
+        for k in ks:
+            w_new, losses = results[k]
+            if fed.compress_bits:
+                # int8 delta on the wire; server reconstructs against the
+                # anchor it handed out (communication-efficient FL, §II)
+                from repro.core.compression import roundtrip
+                w_new, _ = roundtrip(w_new, server.params,
+                                     fed.compress_bits)
+            dt = _client_time(fleet[k], H[k], iters_per_epoch, rng, jitter)
+            heapq.heappush(events, (now + dt, seq, k, w_new, tau,
+                                    losses[-1] if losses else math.nan))
+            seq += 1
+            trace.append(TraceEvent(now, "dispatch", k, tau))
 
-    for k in range(fed.num_clients):
-        dispatch(k, 0.0)
+    dispatch(list(range(fed.num_clients)), 0.0)
 
     now = 0.0
     while server.t < fed.global_epochs and events:
@@ -178,7 +220,7 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
         if eval_fn is not None and server.t % eval_every == 0:
             eval_fn(server.t, now, server.params)
         if server.t < fed.global_epochs:
-            dispatch(k, now)
+            dispatch([k], now)
 
     return SimResult(wall_clock_s=now, history=history, trace=trace,
                      params=server.params, staleness_hist=staleness_hist)
@@ -197,28 +239,47 @@ def run_sync(params0, cfg: ModelConfig, fed: FedConfig,
     """Virtual-clock synchronous FedAvg: each round costs max(client time).
 
     ``engine="scan"`` (default) runs every round as one vmap-over-clients
-    batched program; ``"loop"`` is the legacy per-client loop (parity
-    oracle).
+    batched program; ``"shard"`` additionally splits the round's client
+    axis over this host's device mesh (``launch.mesh.make_fleet_mesh``)
+    with shard_map, psum-reducing the weighted average across shards;
+    ``"loop"`` is the legacy per-client loop (parity oracle).
+
+    Each round the batched engines donate the incoming global params (the
+    new global aliases their buffers; ``params0`` itself is copied once up
+    front and never donated), so an ``eval_fn`` must evaluate the params
+    it is handed immediately, not stash them for later.
     """
     assert len(fleet) == len(client_data) == fed.num_clients
-    assert engine in ("scan", "loop"), engine
+    assert engine in ("scan", "loop", "shard"), engine
     rng = np.random.default_rng(fed.seed)
     if engine == "scan":
         round_engine = fed_engine.make_sync_round(cfg, fed)
+    elif engine == "shard":
+        round_engine = fed_engine.make_sharded_sync_round(cfg, fed)
     else:
         step, opt = fedasync.cached_client_step(cfg, fed)
     mask = trainable_mask(params0, fed.trainable)
     params = params0
+    if engine in ("scan", "shard"):
+        # defensive copy so EVERY round can donate its params under one
+        # jit donation signature (a second signature would re-trace and
+        # re-compile the whole round program) while the caller's params0
+        # stays untouched
+        params = jax.tree_util.tree_map(jnp.array, params0)
     now = 0.0
     history, trace = [], []
     rounds = fed.global_epochs // max(fed.num_clients, 1)
     rounds = max(rounds, 1)
     for r in range(rounds):
         batches = [client_data[k]() for k in range(fed.num_clients)]
-        if engine == "scan":
+        if engine in ("scan", "shard"):
+            # the incoming global (our private copy, or the previous
+            # round's output) is dead after this call: donate it so the
+            # new global reuses its buffers
             params, losses = fedavg.fedavg_round(params, batches, cfg, fed,
                                                  engine=round_engine,
-                                                 mask=mask)
+                                                 mask=mask,
+                                                 donate_params=True)
         else:
             params, losses = fedavg.fedavg_round_loop(
                 params, batches, cfg, fed, step=step, opt=opt, mask=mask)

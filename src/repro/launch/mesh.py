@@ -17,3 +17,15 @@ def make_host_mesh():
     """Whatever this host actually has (CPU tests: 1 device)."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_fleet_mesh(n: int | None = None):
+    """1-D ``('clients',)`` mesh for the sharded federated sync round.
+
+    The round's client axis splits across it (core/fed_engine.py
+    ``ShardedSyncRound``; specs in ``sharding.specs.fed_round_specs``).
+    Defaults to every device this host has — CPU tests get a 1-device
+    mesh, which runs the identical shard_map program unsharded.
+    """
+    n = n or len(jax.devices())
+    return jax.make_mesh((n,), ("clients",))

@@ -55,9 +55,14 @@ def main(argv=None):
     ap.add_argument("--theta", type=float, default=0.01)
     ap.add_argument("--trainable", choices=["all", "last_layer"],
                     default="all")
-    ap.add_argument("--engine", choices=["scan", "loop"], default="scan",
+    ap.add_argument("--engine", choices=["scan", "loop", "shard"],
+                    default="scan",
                     help="client execution: compiled lax.scan/vmap engine "
-                         "or the legacy per-iteration loop")
+                         "(heterogeneous H^k batches via the padded "
+                         "masked scan), 'shard' to additionally split the "
+                         "sync round's client axis over this host's "
+                         "devices (sync mode only), or the legacy "
+                         "per-iteration loop")
     ap.add_argument("--distill-first", action="store_true",
                     help="run a tiny teacher->student KD stage first")
     ap.add_argument("--seed", type=int, default=0)
@@ -119,7 +124,13 @@ def main(argv=None):
                 for k in range(args.clients)]
         run = simulator.run_async if args.mode == "async" \
             else simulator.run_sync
-        res = run(params, cfg, fed, fleet, data, engine=args.engine)
+        eng = args.engine
+        if args.mode == "async" and eng == "shard":
+            # the async path has no fleet-wide round to shard; its bursts
+            # batch through the padded vmap program instead
+            print("  engine=shard is sync-only; async uses engine=scan")
+            eng = "scan"
+        res = run(params, cfg, fed, fleet, data, engine=eng)
         params = res.params
         print(f"  virtual wall-clock {res.wall_clock_s:.0f}s "
               f"final loss {res.final_loss:.4f}")

@@ -19,6 +19,39 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.types import ModelConfig, ShapeConfig
 
 
+def shard_map(f, mesh: Mesh, in_specs, out_specs,
+              check_replication: bool = True):
+    """Version-portable ``shard_map``.
+
+    Newer jax exposes ``jax.shard_map`` (replication checking spelled
+    ``check_vma``); 0.4.x only ships ``jax.experimental.shard_map``
+    (spelled ``check_rep``). Both the MoE distributed dispatch
+    (models/moe.py) and the sharded federated sync round
+    (core/fed_engine.py) go through this wrapper so they run on either.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             check_vma=check_replication)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_replication)
+
+
+def fed_round_specs(mesh: Mesh) -> dict:
+    """PartitionSpecs for the shard_map'ed federated sync round.
+
+    The round has exactly two kinds of operands: per-client arrays with a
+    leading client axis (batch stacks (n, H_max, ...), weights (n,), the
+    H^k iteration vector (n,), per-client losses (n, H)) which shard over
+    the mesh's client axis, and fleet-global arrays (params, trainable
+    mask, the psum'ed new global) which replicate. Specs are pytree
+    prefixes: ``P(axis)`` shards only the leading dim of every leaf.
+    """
+    axis = "clients" if "clients" in mesh.axis_names else mesh.axis_names[0]
+    return {"axis": axis, "clients": P(axis), "replicated": P()}
+
+
 def data_axes(mesh: Mesh):
     """The batch-parallel axes present in a mesh."""
     names = mesh.axis_names

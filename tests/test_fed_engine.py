@@ -2,8 +2,9 @@
 
 The engine (core/fed_engine.py) must reproduce the per-iteration dispatch
 path to float32 tolerance: same local updates, same losses, same simulator
-trajectories — including the int8 delta-compression roundtrip and
-non-uniform per-client H.
+trajectories — including the int8 delta-compression roundtrip, non-uniform
+per-client H (the padded masked-scan program), and the shard_map'ed round
+on a single-device mesh.
 """
 import numpy as np
 import pytest
@@ -83,8 +84,9 @@ def test_vmap_round_matches_loop(setup):
     np.testing.assert_allclose(l_vmap, l_loop, rtol=1e-4)
 
 
-def test_vmap_round_ragged_falls_back(setup):
-    """A client that runs out of data drops to the per-client scan path."""
+def test_vmap_round_ragged_client_pads(setup):
+    """A client that runs out of data no longer breaks the batched round:
+    its stack pads to H_max and the iteration mask absorbs the gap."""
     params, fed, ds = setup
     batches = [list(ds.batches(2, fed.local_iters_max, seed=0)),
                list(ds.batches(2, 1, seed=1))]        # ragged H
@@ -113,6 +115,138 @@ def test_vmap_round_ragged_within_client_falls_back(setup):
                                np.concatenate([np.asarray(l)
                                                for l in l_loop]), rtol=1e-4)
     tree_allclose(g_loop, g_new)
+
+
+def test_stack_error_mentions_padded_path(setup):
+    """The mixed-shape error must point at pad_client_batches (the padded
+    masked-scan round), not at falling back to the per-client loop."""
+    params, fed, ds = setup
+    stacks = [stack_batches(iter(list(ds.batches(2, h, seed=h))))
+              for h in (3, 1)]
+    with pytest.raises(ValueError, match="pad_client_batches"):
+        fed_engine.stack_client_batches(stacks)
+    # and padding refuses mismatched keys even when leaf shapes line up
+    renamed = {f"x_{k}": v for k, v in stacks[1].items()}
+    with pytest.raises(ValueError, match="structure"):
+        fed_engine.pad_client_batches([stacks[0], renamed])
+
+
+def test_padded_batch_matches_loop(setup):
+    """run_batch: clients with H^k < H_max agree with the per-client loop
+    oracle; losses past H^k are NaN; the compile cache holds ONE program
+    per round shape across different H vectors."""
+    params, fed, ds = setup
+    run = fed_engine.ClientRun(TINY, fed)   # private: isolate cache counts
+    for Hs in ([3, 1, 2], [1, 2, 1], [2, 3, 3]):
+        blists = [list(ds.batches(2, h, seed=10 * h + i))
+                  for i, h in enumerate(Hs)]
+        w_news, losses = run.run_batch(
+            params, [stack_batches(iter(b)) for b in blists])
+        losses = np.asarray(losses)
+        assert losses.shape == (len(Hs), fed.local_iters_max)
+        for j, (h, bl) in enumerate(zip(Hs, blists)):
+            w_loop, _, l_loop = fedasync.client_update(
+                params, 0, iter(bl), TINY, fed, num_iters=h)
+            np.testing.assert_allclose(losses[j, :h], l_loop, rtol=1e-4)
+            assert np.all(np.isnan(losses[j, h:]))
+            tree_allclose(jax.tree_util.tree_map(lambda a, j=j: a[j],
+                                                 w_news), w_loop)
+    # H^k is traced, not a compile key: 3 different H vectors, 1 program
+    assert run.num_compiled == 1
+
+
+def test_caller_iters_win_over_stack_lengths(setup):
+    """An explicit iters= with unequal-length stacks truncates to the
+    requested H^k — padding must not silently overwrite it."""
+    params, fed, ds = setup
+    run = fed_engine.make_client_run(TINY, fed)
+    blists = [list(ds.batches(2, 3, seed=1)), list(ds.batches(2, 2, seed=2))]
+    stacks = [stack_batches(iter(b)) for b in blists]
+    w_news, losses = run.run_batch(params, stacks, iters=[2, 1])
+    for j, (h, bl) in enumerate(zip([2, 1], blists)):
+        w_loop, _, l_loop = fedasync.client_update(
+            params, 0, iter(bl), TINY, fed, num_iters=h)
+        np.testing.assert_allclose(np.asarray(losses)[j, :h], l_loop,
+                                   rtol=1e-4)
+        tree_allclose(jax.tree_util.tree_map(lambda a, j=j: a[j], w_news),
+                      w_loop)
+
+
+def test_padded_compression_roundtrip_parity(setup):
+    """The int8 delta roundtrip applied to padded-batch outputs matches
+    the loop oracle's compressed updates (what the async server sees)."""
+    from repro.core.compression import roundtrip
+    params, fed, ds = setup
+    Hs = [3, 1]
+    blists = [list(ds.batches(2, h, seed=h)) for h in Hs]
+    run = fed_engine.make_client_run(TINY, fed)
+    w_news, _ = run.run_batch(
+        params, [stack_batches(iter(b)) for b in blists])
+    for j, (h, bl) in enumerate(zip(Hs, blists)):
+        w_loop, _, _ = fedasync.client_update(params, 0, iter(bl), TINY,
+                                              fed, num_iters=h)
+        w_pad = jax.tree_util.tree_map(lambda a, j=j: a[j], w_news)
+        rt_pad, _ = roundtrip(w_pad, params, 8)
+        rt_loop, _ = roundtrip(w_loop, params, 8)
+        tree_allclose(rt_pad, rt_loop, rtol=1e-3, atol=1e-4)
+
+
+def test_heterogeneous_round_matches_loop(setup):
+    """A fleet with per-client H^k (including an out-of-data client) runs
+    as ONE padded program with loop-oracle parity — no per-client
+    fallback."""
+    params, fed, ds = setup
+    batches = [list(ds.batches(2, 3, seed=0)), list(ds.batches(2, 1, seed=1)),
+               [], list(ds.batches(2, 2, seed=2))]
+    sizes = [10, 30, 20, 40]
+    g_loop, l_loop = fedavg.fedavg_round_loop(
+        params, [iter(b) for b in batches], TINY, fed, data_sizes=sizes)
+    engine = fed_engine.SyncRound(TINY, fed)    # private: count compiles
+    g_pad, l_pad = fedavg.fedavg_round(
+        params, [iter(b) for b in batches], TINY, fed, engine=engine,
+        data_sizes=sizes)
+    assert [len(l) for l in l_pad] == [3, 1, 0, 2]
+    assert engine.num_compiled == 1             # one batched program
+    np.testing.assert_allclose(
+        np.concatenate([np.asarray(l) for l in l_pad]),
+        np.concatenate([np.asarray(l) for l in l_loop]), rtol=1e-4)
+    tree_allclose(g_loop, g_pad)
+
+
+def test_sharded_round_single_device_smoke(setup):
+    """shard_map round on this host's (1-device) fleet mesh: same layout
+    and psum-reduced weighted average as production, loop-oracle parity
+    for a heterogeneous H^k fleet."""
+    from repro.launch.mesh import make_fleet_mesh
+    params, fed, ds = setup
+    mesh = make_fleet_mesh()
+    assert mesh.axis_names == ("clients",)
+    batches = [list(ds.batches(2, h, seed=h)) for h in (3, 1, 2)]
+    sizes = [10, 30, 60]
+    engine = fed_engine.make_sharded_sync_round(TINY, fed, mesh=mesh)
+    g_loop, l_loop = fedavg.fedavg_round_loop(
+        params, [iter(b) for b in batches], TINY, fed, data_sizes=sizes)
+    g_sh, l_sh = fedavg.fedavg_round(
+        params, [iter(b) for b in batches], TINY, fed, engine=engine,
+        data_sizes=sizes)
+    assert [len(l) for l in l_sh] == [len(l) for l in l_loop]
+    tree_allclose(g_loop, g_sh)
+    # memoized: same (cfg, fed, mesh) -> same engine instance
+    assert fed_engine.make_sharded_sync_round(TINY, fed, mesh=mesh) \
+        is engine
+
+
+def test_run_sync_shard_engine_parity(setup):
+    params, fed, ds = setup
+    ra = simulator.run_sync(params, TINY, fed, JETSON_FLEET_HMDB51,
+                            _fleet_data(ds, fed), engine="shard")
+    rb = simulator.run_sync(params, TINY, fed, JETSON_FLEET_HMDB51,
+                            _fleet_data(ds, fed), engine="loop")
+    assert ra.wall_clock_s == rb.wall_clock_s
+    np.testing.assert_allclose([h[2] for h in ra.history],
+                               [h[2] for h in rb.history],
+                               rtol=1e-3, atol=1e-4)
+    tree_allclose(ra.params, rb.params, rtol=1e-3, atol=1e-4)
 
 
 def _fleet_data(ds, fed):
