@@ -3,12 +3,13 @@
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run table2 roofline
+    PYTHONPATH=src python -m benchmarks.run --list     # names only, no run
 
 A bench may return ``(rows, artifact_paths)`` instead of plain rows to
 register machine-readable outputs (e.g. ``fedengine`` writes
 ``BENCH_fed_engine.json`` with loop vs homogeneous-vmap vs
-padded-heterogeneous-vmap round steps/sec); artifacts are listed after
-the CSV.
+padded-heterogeneous-vmap round steps/sec and the async window sweep);
+artifacts are listed after the CSV.
 """
 import sys
 
@@ -32,6 +33,12 @@ ALL = {
 
 
 def main() -> None:
+    if "--list" in sys.argv[1:]:
+        # import-level smoke (CI): every bench resolved, nothing executed
+        for name, fn in ALL.items():
+            doc = (fn.__doc__ or "").strip().splitlines()
+            print(f"{name}: {doc[0] if doc else ''}")
+        return
     which = sys.argv[1:] or list(ALL)
     rows, artifacts = [], []
     for name in which:

@@ -190,7 +190,11 @@ class ClientRun:
     batched variant: many clients with *different* H^k run as one vmapped
     masked-scan program, returning per-client ``(w_news, losses)`` with
     leading client axes (no aggregation — the async simulator uses this to
-    batch concurrent dispatches; ``SyncRound`` adds the weighted average).
+    batch concurrent dispatches: the fleet-wide kickoff and, with a
+    positive ``simulator.run_async(window=...)``, every steady-state
+    re-dispatch burst; ``SyncRound`` adds the weighted average). Burst
+    sizes m ≤ n_clients each compile once per (m, H_max) shape, so a
+    windowed run is compile-free after its first pass over the sizes.
     """
 
     def __init__(self, cfg: ModelConfig, fed: FedConfig, loss_kwargs=None):
@@ -294,6 +298,24 @@ class ClientRun:
             "batch", self._run_padded_batch, (1,) if donate else (),
             (params_global, client_stacks, jnp.asarray(iters, jnp.int32),
              mask))
+
+    def unstack(self, stacked, n: int):
+        """Split a client-stacked pytree (leaves (n, ...)) into n
+        per-client pytrees in ONE jitted dispatch.
+
+        The eager equivalent — ``tree_map(lambda a: a[j], stacked)`` per
+        client — enqueues n × n_leaves tiny slice ops; for a steady-state
+        async burst that fan-out is paid per *group* and would eat the
+        window's dispatch savings. Living on the engine's ``_JitCache``,
+        the compiled slice programs share the engine's lifetime (and the
+        FIFO-bounded engine cache) instead of accumulating at module
+        scope; one compile per burst size n.
+        """
+        def _unstack(tree):
+            return tuple(jax.tree_util.tree_map(lambda a: a[j], tree)
+                         for j in range(n))
+
+        return self._jits.call(("unstack", n), _unstack, (), (stacked,))
 
 
 _ENGINE_CACHE: dict = {}

@@ -57,6 +57,33 @@ def _mix(params, w_new, beta_t):
         params, w_new)
 
 
+@jax.jit
+def _mix_many(params, betas, *w_news):
+    """Fused sequential mix: m receives applied in order as ONE program.
+
+    ``w_news`` are the m client models (separate pytrees — stacked to a
+    leading update axis *inside* the trace, so the host pays one dispatch,
+    not one ``jnp.stack`` per leaf) and ``betas`` is (m,); a ``lax.scan``
+    threads the server params through the m mixing steps, each the exact
+    arithmetic of ``_mix`` (f32 accumulate, cast back per step), so the
+    result matches m chained ``_mix`` calls — Algorithm 1's sequential
+    mixing order is preserved, only the dispatch count collapses from m
+    to 1. The update count m is a static shape: one compile per group
+    size, bounded by the fleet size (and the staleness bound K+1).
+    """
+    w_stack = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *w_news)
+
+    def body(p, xs):
+        w, b = xs
+        return jax.tree_util.tree_map(
+            lambda a, c: ((1.0 - b) * a.astype(jnp.float32)
+                          + b * c.astype(jnp.float32)).astype(a.dtype),
+            p, w), None
+
+    out, _ = jax.lax.scan(body, params, (w_stack, betas))
+    return out
+
+
 def make_server_update(fed: FedConfig):
     """Jitted mixing update: (w_{t-1}, w_new, β_t) -> w_t.
 
@@ -68,19 +95,81 @@ def make_server_update(fed: FedConfig):
     return _mix
 
 
+def make_batched_server_update(fed: FedConfig):
+    """Jitted fused mix for a group of receives: (w, βs, *w_news) -> w.
+
+    Config-independent like ``make_server_update`` — every FedConfig
+    shares the one jitted ``lax.scan`` program per group size.
+    """
+    return _mix_many
+
+
+def group_mixing_weights(fed: FedConfig, t: int, taus):
+    """(staleness, β_t) for each of a group of receives applied in order.
+
+    The i-th receive of the group lands at global epoch ``t + i``, so its
+    staleness is ``clamp(t + i - τ_i, 0, K)`` — identical to what m
+    chained ``server_receive`` calls would compute.
+    """
+    stals, betas = [], []
+    for i, tau in enumerate(taus):
+        s = min(max(t + i - int(tau), 0), fed.max_staleness)
+        stals.append(s)
+        betas.append(float(fed.mixing_beta
+                           * (1.0 + s) ** (-fed.staleness_a)))
+    return stals, betas
+
+
 def server_receive(state: ServerState, w_new, tau: int, fed: FedConfig,
                    mix=None) -> ServerState:
     """One server step of Algorithm 1."""
     if mix is None:
         mix = make_server_update(fed)
     # staleness = global updates applied since the client grabbed the model;
-    # s(0) = 1 when none intervened. Assumption 3 clamps at K.
-    staleness = min(max(state.t - tau, 0), fed.max_staleness)
-    beta_t = float(fed.mixing_beta
-                   * (1.0 + staleness) ** (-fed.staleness_a))
+    # s(0) = 1 when none intervened. Assumption 3 clamps at K. The formula
+    # lives in group_mixing_weights so the windowed path can't diverge.
+    _, (beta_t,) = group_mixing_weights(fed, state.t, [tau])
     params = mix(state.params, w_new, jnp.float32(beta_t))
     return ServerState(params=params, t=state.t + 1,
                        total_updates=state.total_updates + 1)
+
+
+def server_receive_many(state: ServerState, updates, fed: FedConfig,
+                        mix_many=None, mix=None):
+    """Apply a group of receives ``[(w_new, τ), ...]`` in order, fused.
+
+    Semantically m consecutive ``server_receive`` calls — each update's
+    β_t is computed at its position in the group (``group_mixing_weights``)
+    and the mixes apply sequentially — but dispatched as ONE jitted
+    ``lax.scan`` program instead of m separate ``_mix`` calls. This is the
+    server half of the simulator's staleness-bounded micro-batching window
+    (``simulator.run_async(window=...)``).
+
+    Singleton groups stay on the scalar mix path (``mix``, default the
+    shared ``_mix``) — at window=0 that is every receive, keeping it
+    bit-identical to the event-by-event loop; ``mix_many`` only runs for
+    m ≥ 2.
+
+    Returns ``(new_state, stalenesses, betas)`` so callers can trace each
+    receive without recomputing Algorithm 1's weights.
+    """
+    if mix_many is None:
+        mix_many = make_batched_server_update(fed)
+    taus = [tau for _, tau in updates]
+    stals, betas = group_mixing_weights(fed, state.t, taus)
+    if len(updates) == 1:        # singleton: stay on the scalar mix path
+        if mix is None:
+            mix = make_server_update(fed)
+        w_new, _ = updates[0]
+        params = mix(state.params, w_new, jnp.float32(betas[0]))
+        return (ServerState(params=params, t=state.t + 1,
+                            total_updates=state.total_updates + 1),
+                stals, betas)
+    params = mix_many(state.params, jnp.asarray(betas, jnp.float32),
+                      *[w for w, _ in updates])
+    return (ServerState(params=params, t=state.t + len(updates),
+                        total_updates=state.total_updates + len(updates)),
+            stals, betas)
 
 
 # ---------------------------------------------------------------------------

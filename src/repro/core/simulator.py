@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fed_engine, fedasync, fedavg
-from repro.core.fedasync import ServerState, server_receive
+from repro.core.compression import roundtrip
+from repro.core.fedasync import ServerState
 from repro.data.synthetic import stack_batches
 from repro.optim import trainable_mask
 from repro.types import FedConfig, ModelConfig
@@ -75,6 +76,9 @@ class SimResult:
     trace: list = field(default_factory=list)
     params: object = None
     staleness_hist: dict = field(default_factory=dict)
+    # receive-group sizes drained per window (async): {group_size: count}.
+    # window=0 is always {1: global_epochs}.
+    group_hist: dict = field(default_factory=dict)
 
     @property
     def final_loss(self) -> float:
@@ -93,6 +97,61 @@ def _client_time(profile: DeviceProfile, local_iters: int,
     return t
 
 
+class Scheduler:
+    """Virtual-clock event queue for the async simulator.
+
+    Wraps the ``(finish_time, seq, client, w_new, τ, loss)`` heapq that
+    used to live inline in ``run_async`` and owns the *staleness-bounded
+    micro-batching window*: ``pop_window`` returns the earliest pending
+    receive plus every later receive that
+
+      (a) finishes within ``window`` virtual seconds of it,
+      (b) would be applied at unclamped staleness ≤ ``max_staleness``
+          given its position in the group (the i-th receive of a group
+          started at global epoch t lands at epoch t+i), and
+      (c) fits the remaining global-epoch ``budget``.
+
+    ``window <= 0`` degenerates to pop-one — exactly the legacy
+    event-by-event loop, including its tie handling (two receives sharing
+    a finish time still apply as two separate groups).
+    """
+
+    def __init__(self, window: float = 0.0):
+        self.window = float(window)
+        self._events: list = []
+        self._seq = 0
+
+    def push(self, finish_time: float, client: int, w_new, tau: int,
+             loss: float) -> None:
+        heapq.heappush(self._events,
+                       (finish_time, self._seq, client, w_new, tau, loss))
+        self._seq += 1
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    def pop_window(self, t: int, max_staleness: int, budget: int) -> list:
+        """Drain one receive group; see the class docstring for the rules.
+
+        Returns a list of ``(finish_time, client, w_new, τ, loss)`` in
+        virtual-time order (heap order), never empty, never longer than
+        ``budget``.
+        """
+        ft, _, k, w_new, tau, loss = heapq.heappop(self._events)
+        group = [(ft, k, w_new, tau, loss)]
+        if self.window > 0:
+            deadline = ft + self.window
+            while self._events and len(group) < budget:
+                ft, _, k, w_new, tau, loss = self._events[0]
+                if ft > deadline:
+                    break
+                if (t + len(group)) - tau > max_staleness:
+                    break        # admitting it would exceed Assumption 3
+                heapq.heappop(self._events)
+                group.append((ft, k, w_new, tau, loss))
+        return group
+
+
 # ---------------------------------------------------------------------------
 # Asynchronous (paper Algorithm 1)
 # ---------------------------------------------------------------------------
@@ -102,7 +161,8 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
               client_data: Sequence[Callable[[], Iterable]],
               iters_per_epoch: int = 1, jitter: float = 0.0,
               eval_fn: Optional[Callable] = None,
-              eval_every: int = 10, engine: str = "scan") -> SimResult:
+              eval_every: int = 10, engine: str = "scan",
+              window: float = 0.0) -> SimResult:
     """Virtual-clock run of asynchronous federated learning.
 
     client_data[k]() returns a fresh iterator of batches for client k.
@@ -110,12 +170,26 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
     ``engine``: "scan" (default) runs each client's H local iterations as
     one compiled ``lax.scan`` program (core/fed_engine.py) — one dispatch
     and one host sync per *update* instead of per *iteration* — and
-    batches *concurrent* dispatches (the initial fleet-wide kickoff, or
-    any burst sharing one server state) into a single padded vmap program
-    even though each client has its own H^k: stacks pad to H_max and the
+    batches *concurrent* dispatches (the fleet-wide kickoff, or any burst
+    sharing one server state) into a single padded vmap program even
+    though each client has its own H^k: stacks pad to H_max and the
     engine's iteration mask absorbs the difference. "loop" is the legacy
     per-iteration path, kept as a parity oracle. The event-driven virtual
     clock is identical under both.
+
+    ``window`` (virtual seconds) is the staleness-bounded micro-batching
+    window: receives finishing within ``window`` of the earliest pending
+    one — and whose staleness at their position in the group stays ≤
+    ``fed.max_staleness`` — drain together (``Scheduler.pop_window``).
+    The group applies to the server as ONE fused sequential mix
+    (``fedasync.server_receive_many``: a ``lax.scan`` over the stacked
+    ``(w_new, β_t)``, preserving Algorithm 1's mixing order), and the
+    group's re-dispatches burst through the padded batched engine as ONE
+    program — steady-state async then runs the same compile-cache-friendly
+    hot path as the kickoff. The virtual-clock cost of a window is that a
+    grouped client idles until the group's last receive before picking up
+    its next model; ``eval_fn`` granularity also coarsens to group
+    boundaries. ``window=0`` (default) is the exact event-by-event loop.
     """
     assert len(fleet) == len(client_data) == fed.num_clients
     assert engine in ("scan", "loop"), engine
@@ -125,7 +199,7 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
     else:
         step, opt = fedasync.cached_client_step(cfg, fed)
     mask = trainable_mask(params0, fed.trainable)
-    mix = fedasync.make_server_update(fed)
+    mix_many = fedasync.make_batched_server_update(fed)
     server = ServerState(params=params0, t=0)
 
     # per-client assigned local iteration counts H^k ∈ [H_min, H_max]:
@@ -138,10 +212,10 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
                               - frac * (fed.local_iters_max
                                         - fed.local_iters_min)))
 
-    events: list = []   # (finish_time, seq, client, w_new_promise)
+    sched = Scheduler(window)
     trace, history = [], []
     staleness_hist: dict = {}
-    seq = 0
+    group_hist: dict = {}
 
     def _run_clients(ks):
         """Local training for clients ``ks`` from the *current* server
@@ -165,10 +239,11 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
                         server.params, padded, iters, mask=mask,
                         donate=True)
                     la = np.asarray(loss_arr)    # single host sync
+                    per_client = run.unstack(
+                        w_news, len(live))       # one dispatch, not n×leaves
                     for j, k in enumerate(live):
-                        w = jax.tree_util.tree_map(lambda a, j=j: a[j],
-                                                   w_news)
-                        results[k] = (w, [float(la[j, iters[j] - 1])])
+                        results[k] = (per_client[j],
+                                      [float(la[j, iters[j] - 1])])
             for k in ks:
                 if k in results:
                     continue
@@ -187,7 +262,6 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
         return results
 
     def dispatch(ks, now: float):
-        nonlocal seq
         tau = server.t
         # run the local training NOW (numerically); finish time is virtual
         results = _run_clients(ks)
@@ -196,34 +270,42 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
             if fed.compress_bits:
                 # int8 delta on the wire; server reconstructs against the
                 # anchor it handed out (communication-efficient FL, §II)
-                from repro.core.compression import roundtrip
                 w_new, _ = roundtrip(w_new, server.params,
                                      fed.compress_bits)
             dt = _client_time(fleet[k], H[k], iters_per_epoch, rng, jitter)
-            heapq.heappush(events, (now + dt, seq, k, w_new, tau,
-                                    losses[-1] if losses else math.nan))
-            seq += 1
+            sched.push(now + dt, k, w_new, tau,
+                       losses[-1] if losses else math.nan)
             trace.append(TraceEvent(now, "dispatch", k, tau))
 
     dispatch(list(range(fed.num_clients)), 0.0)
 
     now = 0.0
-    while server.t < fed.global_epochs and events:
-        now, _, k, w_new, tau, loss = heapq.heappop(events)
-        staleness = min(max(server.t - tau, 0), fed.max_staleness)
-        beta_t = fed.mixing_beta * (1.0 + staleness) ** (-fed.staleness_a)
-        server = server_receive(server, w_new, tau, fed, mix=mix)
-        staleness_hist[staleness] = staleness_hist.get(staleness, 0) + 1
-        trace.append(TraceEvent(now, "receive", k, server.t, staleness,
-                                beta_t, loss))
-        history.append((now, server.t, loss))
-        if eval_fn is not None and server.t % eval_every == 0:
+    while server.t < fed.global_epochs and len(sched):
+        group = sched.pop_window(server.t, fed.max_staleness,
+                                 fed.global_epochs - server.t)
+        t0 = server.t
+        server, stals, betas = fedasync.server_receive_many(
+            server, [(w_new, tau) for _, _, w_new, tau, _ in group], fed,
+            mix_many=mix_many)
+        for i, ((ft, k, _, _, loss), st, bt) in enumerate(
+                zip(group, stals, betas)):
+            now = ft
+            staleness_hist[st] = staleness_hist.get(st, 0) + 1
+            trace.append(TraceEvent(ft, "receive", k, t0 + i + 1, st, bt,
+                                    loss))
+            history.append((ft, t0 + i + 1, loss))
+        group_hist[len(group)] = group_hist.get(len(group), 0) + 1
+        if eval_fn is not None and any(
+                t % eval_every == 0 for t in range(t0 + 1, server.t + 1)):
+            # the fused mix has no intermediate params: evaluate once at
+            # the group boundary (exact per-epoch cadence at window=0)
             eval_fn(server.t, now, server.params)
         if server.t < fed.global_epochs:
-            dispatch([k], now)
+            dispatch([k for _, k, _, _, _ in group], now)
 
     return SimResult(wall_clock_s=now, history=history, trace=trace,
-                     params=server.params, staleness_hist=staleness_hist)
+                     params=server.params, staleness_hist=staleness_hist,
+                     group_hist=group_hist)
 
 
 # ---------------------------------------------------------------------------

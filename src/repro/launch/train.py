@@ -63,6 +63,12 @@ def main(argv=None):
                          "sync round's client axis over this host's "
                          "devices (sync mode only), or the legacy "
                          "per-iteration loop")
+    ap.add_argument("--async-window", type=float, default=0.0,
+                    help="staleness-bounded micro-batching window W in "
+                         "virtual seconds (async mode only): receives "
+                         "finishing within W of each other apply as one "
+                         "fused server mix and re-dispatch as one padded "
+                         "batched program; 0 = event-by-event")
     ap.add_argument("--distill-first", action="store_true",
                     help="run a tiny teacher->student KD stage first")
     ap.add_argument("--seed", type=int, default=0)
@@ -130,12 +136,18 @@ def main(argv=None):
             # batch through the padded vmap program instead
             print("  engine=shard is sync-only; async uses engine=scan")
             eng = "scan"
-        res = run(params, cfg, fed, fleet, data, engine=eng)
+        kwargs = {}
+        if args.mode == "async":
+            kwargs["window"] = args.async_window
+        res = run(params, cfg, fed, fleet, data, engine=eng, **kwargs)
         params = res.params
         print(f"  virtual wall-clock {res.wall_clock_s:.0f}s "
               f"final loss {res.final_loss:.4f}")
         if args.mode == "async":
             print(f"  staleness histogram: {res.staleness_hist}")
+            if args.async_window > 0:
+                print(f"  receive-group histogram (W={args.async_window}): "
+                      f"{res.group_hist}")
         result = {"mode": args.mode, "final_loss": res.final_loss,
                   "virtual_wall_s": res.wall_clock_s,
                   "real_wall_s": time.time() - t0}

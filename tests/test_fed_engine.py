@@ -285,6 +285,23 @@ def test_run_sync_engine_parity(setup):
     tree_allclose(ra.params, rb.params, rtol=1e-3, atol=1e-4)
 
 
+def test_unstack_clients_matches_eager_slices():
+    """One jitted dispatch must split a client-stacked pytree exactly like
+    per-client eager ``a[j]`` slicing (the async burst's fan-out)."""
+    rng = np.random.default_rng(0)
+    stacked = {"w": jnp.asarray(rng.standard_normal((3, 4, 2)), jnp.float32),
+               "b": jnp.asarray(rng.standard_normal((3, 5)), jnp.float32)}
+    run = fed_engine.ClientRun(TINY, FedConfig(num_clients=3))
+    out = run.unstack(stacked, 3)
+    assert len(out) == 3
+    for j in range(3):
+        for got, ref in zip(jax.tree_util.tree_leaves(out[j]),
+                            jax.tree_util.tree_leaves(
+                                jax.tree_util.tree_map(
+                                    lambda a: a[j], stacked))):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
 def test_server_mix_shared_across_configs():
     """server_receive(mix=None) must reuse one jitted mix — the program is
     config-independent (beta_t is an argument), so no per-receive or even

@@ -48,6 +48,48 @@ def test_staleness_clamped_at_K():
     np.testing.assert_allclose(np.asarray(st2.params["a"]), beta, rtol=1e-6)
 
 
+def test_batched_server_receive_matches_chained():
+    """``server_receive_many`` (one fused lax.scan mix) must equal m
+    chained ``server_receive`` calls: same per-position staleness/β_t
+    (the i-th update of a group lands at epoch t+i) and the same mixed
+    params — Algorithm 1's sequential order, one dispatch."""
+    fed = FedConfig(mixing_beta=0.7, staleness_a=0.5, max_staleness=4)
+    rng = np.random.default_rng(3)
+
+    def tree():
+        return {"a": jnp.asarray(rng.standard_normal((4, 3)), jnp.float32),
+                "b": jnp.asarray(rng.standard_normal(5), jnp.float32)}
+
+    updates = [(tree(), tau) for tau in (2, 0, 3, 1)]
+    st0 = ServerState(params=tree(), t=3)
+
+    chained = st0
+    for w_new, tau in updates:
+        chained = server_receive(chained, w_new, tau, fed)
+
+    fused, stals, betas = fedasync.server_receive_many(st0, updates, fed)
+    assert fused.t == chained.t == st0.t + len(updates)
+    assert fused.total_updates == chained.total_updates
+    # per-position weights: staleness of update i is clamp(t+i-τ_i, 0, K)
+    want = [min(max(st0.t + i - tau, 0), fed.max_staleness)
+            for i, (_, tau) in enumerate(updates)]
+    assert stals == want
+    np.testing.assert_allclose(
+        betas, [0.7 * (1 + s) ** -0.5 for s in want], rtol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(fused.params),
+                    jax.tree_util.tree_leaves(chained.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+    # singleton groups take the scalar _mix path and still agree
+    one, stals1, _ = fedasync.server_receive_many(st0, updates[:1], fed)
+    w0, tau0 = updates[0]
+    ref = server_receive(st0, w0, tau0, fed)
+    assert stals1 == want[:1]
+    for a, b in zip(jax.tree_util.tree_leaves(one.params),
+                    jax.tree_util.tree_leaves(ref.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_proximal_gradient():
     from repro.optim.proximal import proximal_grad, proximal_penalty
     g = {"w": jnp.ones(3)}

@@ -30,6 +30,23 @@ def test_analytic_async_beats_sync_both_datasets():
         assert sp["reduction"] > 0.3     # the paper reports ~40%
 
 
+def test_table2_wall_clock_reduction_at_least_35pct():
+    """The paper's Table II headline: async cuts wall-clock ≈40% vs sync.
+
+    The analytic model (docs/simulator.md, "The Table II claim"):
+      sync  = (E / n) · max_k T_k          — every round waits for the
+                                              slowest device
+      async = E / Σ_k (1 / T_k)            — clients stream independently
+                                              at aggregate rate Σ 1/T_k
+    with T_k = epoch_seconds_k · local_epochs + upload_seconds_k. Both
+    Jetson fleets (Tables IV/V) must show ≥35% reduction at the paper's
+    operating point (E=80, 3 local epochs).
+    """
+    for fleet in (JETSON_FLEET_HMDB51, JETSON_FLEET_UCF101):
+        sp = analytic_speedup(fleet, epochs=80, local_epochs=3)
+        assert sp["reduction"] >= 0.35, (fleet[0], sp)
+
+
 @pytest.fixture(scope="module")
 def tiny_setup():
     cfg = RESNET18.reduced()
@@ -64,6 +81,85 @@ def test_async_wallclock_beats_sync(tiny_setup):
     # losses decrease in both
     assert ra.history[-1][2] < ra.history[0][2] * 2
     assert rs.history[-1][2] < rs.history[0][2] * 2
+
+
+# ---------------------------------------------------------------------------
+# Staleness-bounded async micro-batching window
+# ---------------------------------------------------------------------------
+
+def _fresh_data(ds, parts, n=4):
+    """Fresh BatchLoaders: the loader is stateful across calls (each call
+    is a new local epoch), so parity runs each need their own set."""
+    return [BatchLoader(ds, 4, steps=4, seed=k, indices=parts[k])
+            for k in range(n)]
+
+
+@pytest.mark.slow
+def test_window_zero_matches_event_by_event(tiny_setup):
+    """window=0 IS the legacy loop: singleton groups, the scalar ``_mix``
+    path, re-dispatch immediately after each receive — bit-identical
+    params across repeated runs, and trace/staleness parity with the
+    per-iteration loop oracle."""
+    cfg, params, ds, fed, _ = tiny_setup
+    parts = iid_partition(len(ds), 4)
+    res = simulator.run_async(params, cfg, fed, JETSON_FLEET_HMDB51,
+                              _fresh_data(ds, parts), window=0.0)
+    again = simulator.run_async(params, cfg, fed, JETSON_FLEET_HMDB51,
+                                _fresh_data(ds, parts), window=0.0)
+    key = [(e.kind, e.client, e.global_epoch, e.staleness) for e in res.trace]
+    assert key == [(e.kind, e.client, e.global_epoch, e.staleness)
+                   for e in again.trace]
+    for a, b in zip(jax.tree_util.tree_leaves(res.params),
+                    jax.tree_util.tree_leaves(again.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # event-by-event invariants of the legacy loop
+    assert res.group_hist == {1: fed.global_epochs}
+    assert sum(res.staleness_hist.values()) == fed.global_epochs
+    # every receive (while budget remains) is immediately followed by that
+    # client's re-dispatch — no deferred bursts at window=0
+    recv = [(i, e) for i, e in enumerate(res.trace) if e.kind == "receive"]
+    for i, e in recv:
+        if e.global_epoch < fed.global_epochs:
+            nxt = res.trace[i + 1]
+            assert (nxt.kind, nxt.client) == ("dispatch", e.client)
+    # the loop oracle sees the same event order and staleness accounting
+    oracle = simulator.run_async(params, cfg, fed, JETSON_FLEET_HMDB51,
+                                 _fresh_data(ds, parts), engine="loop",
+                                 window=0.0)
+    assert key == [(e.kind, e.client, e.global_epoch, e.staleness)
+                   for e in oracle.trace]
+    assert res.staleness_hist == oracle.staleness_hist
+    for a, b in zip(jax.tree_util.tree_leaves(res.params),
+                    jax.tree_util.tree_leaves(oracle.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.slow
+def test_positive_window_groups_and_respects_staleness_bound(tiny_setup):
+    """A positive window forms multi-receive groups on a heterogeneous
+    fleet but never admits a receive whose position-in-group staleness
+    would exceed fed.max_staleness (Assumption 3)."""
+    cfg, params, ds, fed, _ = tiny_setup
+    parts = iid_partition(len(ds), 4)
+    res = simulator.run_async(params, cfg, fed, JETSON_FLEET_HMDB51,
+                              _fresh_data(ds, parts), window=300.0)
+    assert sum(k * v for k, v in res.group_hist.items()) == fed.global_epochs
+    assert max(res.group_hist) > 1              # grouping actually happened
+    assert sum(res.staleness_hist.values()) == fed.global_epochs
+    assert len(res.history) == fed.global_epochs
+    assert np.isfinite(res.final_loss)
+    # tight K: an unbounded window must cap its groups at the staleness
+    # bound, and every traced receive stays within it
+    import dataclasses
+    fed_k = dataclasses.replace(fed, max_staleness=2)
+    res_k = simulator.run_async(params, cfg, fed_k, JETSON_FLEET_HMDB51,
+                                _fresh_data(ds, parts), window=1e9)
+    recv = [e for e in res_k.trace if e.kind == "receive"]
+    assert recv and all(e.staleness <= fed_k.max_staleness for e in recv)
+    # with K=2 a group's 4th member would sit at staleness 3: impossible
+    assert max(res_k.group_hist) <= fed_k.max_staleness + 1
 
 
 def test_client_time_jitter_is_mean_preserving():
