@@ -1,0 +1,117 @@
+"""Continuous serving: bucketed vs per-length prefill under a mixed stream.
+
+Embedded serving (paper Table V) lives on the same bounded-compile budget
+as the fed engine: every distinct prompt length that reaches an exact-
+length prefill costs an XLA compile, and on an edge device compiles are
+seconds while decode steps are milliseconds. This bench drives the
+continuous batcher (core/serving.py) over a mixed-length request stream
+twice — per-request-length prefill (``min_bucket=0``) vs power-of-two
+bucketed prefill — and writes end-to-end throughput plus *prefill compile
+counts* to ``BENCH_serving.json``.
+
+    PYTHONPATH=src python -m benchmarks.run serving
+    PYTHONPATH=src python -m benchmarks.serving_bench --smoke   # CI shapes
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core.serving import ContinuousBatcher
+from repro.models import registry
+from repro.types import ModelConfig
+
+# decode is dispatch-bound at serving-fleet scale: a reduced-width model
+SERVE_CFG = ModelConfig(name="serve-bench-tiny", family="dense",
+                        num_layers=2, d_model=64, num_heads=2,
+                        num_kv_heads=2, d_ff=128, vocab_size=256)
+
+ARTIFACT = "BENCH_serving.json"
+
+
+def _stream(rng, vocab: int, lengths) -> list:
+    return [rng.integers(0, vocab, int(n), dtype=np.int32) for n in lengths]
+
+
+def _serve(params, cfg, prompts, *, max_slots, max_len, gen, min_bucket):
+    srv = ContinuousBatcher(params, cfg, max_slots=max_slots,
+                            max_len=max_len, min_bucket=min_bucket)
+    for p in prompts:
+        srv.submit(p, max_new=gen)
+    t0 = time.perf_counter()
+    done = srv.run()
+    dt = time.perf_counter() - t0
+    assert len(done) == len(prompts)
+    toks = sum(len(r.out) for r in done)
+    return {
+        "wall_s": dt,
+        "gen_tok_per_s": toks / max(dt, 1e-9),
+        "prefill_compiles": srv.prefill_compiles,
+        "total_compiles": srv.num_compiled,
+        "n_buckets": len(srv.buckets),
+        "group_admits": {str(k): v for k, v in
+                         sorted(srv.group_admits.items())},
+        "outputs": [r.out for r in done],
+    }
+
+
+def serving_bench(smoke: bool = False, out_json: str | None = ARTIFACT):
+    """Bucketed vs per-length prefill: throughput + compile counts
+    (writes BENCH_serving.json)."""
+    print("\n== serving bench (bucketed vs per-length prefill) ==")
+    cfg = SERVE_CFG
+    if smoke:
+        max_slots, max_len, gen, n_req = 2, 32, 2, 6
+        lengths = [3, 5, 7, 9, 11, 13][:n_req]
+    else:
+        max_slots, max_len, gen, n_req = 4, 128, 8, 32
+        rng_l = np.random.default_rng(1)
+        lengths = list(rng_l.integers(1, max_len - gen, n_req))
+    rng = np.random.default_rng(0)
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _stream(rng, cfg.vocab_size, lengths)
+
+    per_len = _serve(params, cfg, prompts, max_slots=max_slots,
+                     max_len=max_len, gen=gen, min_bucket=0)
+    bucketed = _serve(params, cfg, prompts, max_slots=max_slots,
+                      max_len=max_len, gen=gen, min_bucket=8)
+    assert bucketed.pop("outputs") == per_len.pop("outputs"), \
+        "bucketed prefill changed greedy outputs"
+    assert bucketed["prefill_compiles"] <= bucketed["n_buckets"]
+
+    report = {
+        "config": {"arch": cfg.name, "max_slots": max_slots,
+                   "max_len": max_len, "gen": gen, "requests": n_req,
+                   "distinct_prompt_lengths": len(set(map(int, lengths))),
+                   "smoke": smoke},
+        "per_length": per_len,
+        "bucketed": bucketed,
+        "prefill_compile_ratio":
+            per_len["prefill_compiles"] / max(bucketed["prefill_compiles"],
+                                              1),
+    }
+    rows = [
+        ("serve_per_length", per_len["wall_s"] * 1e6,
+         f"{per_len['gen_tok_per_s']:.1f} tok/s "
+         f"{per_len['prefill_compiles']} prefill compiles"),
+        ("serve_bucketed", bucketed["wall_s"] * 1e6,
+         f"{bucketed['gen_tok_per_s']:.1f} tok/s "
+         f"{bucketed['prefill_compiles']} prefill compiles "
+         f"(<= {bucketed['n_buckets']} buckets)"),
+    ]
+    for name, us, derived in rows:
+        print(f"  {name}: {us / 1e6:.2f}s — {derived}")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        return rows, [out_json]
+    return rows
+
+
+if __name__ == "__main__":
+    serving_bench(smoke="--smoke" in sys.argv[1:])

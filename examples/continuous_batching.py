@@ -30,6 +30,9 @@ done = srv.run()
 dt = time.perf_counter() - t0
 print(f"served {len(done)} requests through 3 slots in {dt:.2f}s "
       f"({sum(len(r.out) for r in done)} tokens)")
+print(f"prefill buckets {srv.buckets}: {srv.prefill_compiles} prefill "
+      f"compiles for {len(set(lengths))} distinct prompt lengths; "
+      f"admit groups {srv.group_admits}")
 
 mismatches = 0
 for req, p in zip(done, prompts):

@@ -32,12 +32,16 @@ global aliases exactly (the scan carry starts from them); ``run_sync``
 uses this from the second round on, when the previous round's output is
 provably dead. See docs/fed_engine.md.
 
+The jit pool itself (``compile_cache.JitCache``) is shared with the
+serving stack: serving's bucketed prefill keys into the same
+static-shape cache machinery this engine keys ``(H, trainable)`` round
+shapes into. See core/compile_cache.py.
+
 The legacy loop remains in place as a parity oracle
 (tests/test_fed_engine.py checks float32 agreement).
 """
 from __future__ import annotations
 
-import warnings
 from typing import Any, Sequence
 
 import numpy as np
@@ -45,6 +49,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.compile_cache import JitCache as _JitCache
 from repro.models import registry
 from repro.optim import apply_mask, proximal_grad, sgd, trainable_mask
 from repro.types import FedConfig, ModelConfig
@@ -148,34 +153,6 @@ def _pad_H(fed: FedConfig, client_stacks) -> int:
     return max(fed.local_iters_max,
                max((_batch_len(s) for s in client_stacks
                     if s is not None), default=0))
-
-
-class _JitCache:
-    """Per-engine pool of jit wrappers keyed by (entry point, donated
-    argnums). Donation variants compile separately, so they are built
-    lazily — an engine that never donates never pays the extra trace.
-    Integer batch leaves (LM tokens) can never alias the float outputs;
-    XLA's "donated buffers were not usable" note for them is suppressed,
-    it is informational and expected.
-    """
-
-    def __init__(self):
-        self._jits: dict = {}
-
-    def call(self, name, fn, donate: tuple, args):
-        key = (name, donate)
-        if key not in self._jits:
-            self._jits[key] = jax.jit(fn, donate_argnums=donate)
-        if not donate:
-            return self._jits[key](*args)
-        with warnings.catch_warnings():
-            warnings.filterwarnings(
-                "ignore", message="Some donated buffers were not usable")
-            return self._jits[key](*args)
-
-    @property
-    def num_compiled(self) -> int:
-        return sum(j._cache_size() for j in self._jits.values())
 
 
 class ClientRun:

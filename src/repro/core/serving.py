@@ -1,4 +1,4 @@
-"""Continuous-batching serving loop (slot-based, iteration-level admission).
+"""Continuous-batching serving loop on the shared compile cache.
 
 The paper's deployment target is per-device inference (Table V); a real
 fleet serves *streams* of requests. This scheduler keeps a fixed pool of
@@ -6,10 +6,23 @@ decode slots; each slot holds one request's KV/SSM state and its own
 position counter. New requests are admitted the moment a slot frees
 (iteration-level scheduling) rather than waiting for a whole batch wave.
 
+Compile discipline (core/compile_cache.py, shared with the fed engine):
+prompts are padded into power-of-two *prefill buckets*
+``bucket(P) = next_pow2(clamp(P, min_bucket, max_len))`` and every admit
+tick prefills all newly admitted requests of a bucket as ONE vmapped
+program of fixed shape ``(max_slots, bucket)`` — so a mixed-length request
+stream compiles at most ``len(buckets)`` prefill programs instead of one
+per distinct prompt length. A per-row length vector masks the padding:
+attention pads are causally invisible and overwritten by decode before
+they could be attended, the SSM recurrence treats pad steps as exact
+no-ops (dt=0), and logits gather at each row's last real token — greedy
+outputs are bit-identical to per-request serving (tested).
+
 Per-slot positions come from ``jax.vmap`` over the batch dim of the
 existing single-stream ``decode_step`` — every family (dense / SWA / MoE /
-SSM / hybrid / VLM) works unchanged, and greedy outputs are bit-identical
-to running each request alone (tested).
+SSM / hybrid) works unchanged. ``min_bucket=0`` keeps the legacy
+per-request-length admission as a parity oracle (and the bench's
+compile-count foil).
 """
 from __future__ import annotations
 
@@ -22,6 +35,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.compile_cache import JitCache, bucket_for, bucket_ladder
 from repro.models import registry
 from repro.types import ModelConfig
 
@@ -44,22 +58,43 @@ class Request:
 
 
 class ContinuousBatcher:
-    """Fixed-slot continuous batching for any LM-family architecture."""
+    """Fixed-slot continuous batching for any LM-family architecture.
+
+    ``min_bucket`` > 0 (default) turns on bucketed prefill: same-tick
+    admits run as one padded ``(max_slots, bucket)`` program per bucket,
+    and ``prefill_compiles`` is bounded by ``len(self.buckets)``.
+    ``min_bucket=0`` prefills each request alone at its exact length
+    (one compile per distinct prompt length) — the parity oracle.
+    """
 
     def __init__(self, params, cfg: ModelConfig, max_slots: int = 4,
-                 max_len: int = 256, dtype=jnp.float32):
+                 max_len: int = 256, dtype=jnp.float32,
+                 min_bucket: int = 8):
         if cfg.is_encdec or cfg.family == "resnet3d":
             raise ValueError(f"{cfg.family}: not a decoder-only server")
+        if cfg.prefix_len:
+            raise ValueError(
+                f"{cfg.name}: prefix-embedding (VLM/audio) serving needs "
+                "per-request prefix tensors, which Request does not carry")
         self.params, self.cfg = params, cfg
         self.max_slots, self.max_len = max_slots, max_len
+        self.min_bucket = int(min_bucket)
+        self.buckets = (bucket_ladder(self.min_bucket, max_len)
+                        if self.min_bucket > 0 else ())
+        self.cache_dtype = dtype
         self.cache = registry.init_cache(cfg, max_slots, max_len, dtype)
         self.pos = np.zeros(max_slots, np.int32)        # next position
         self.last_tok = np.zeros(max_slots, np.int32)
         self.active: list[Optional[Request]] = [None] * max_slots
         self.queue: list[Request] = []
         self.completed: list[Request] = []
+        # {admit group size: count of prefill programs run with it} —
+        # serving's mirror of the async simulator's SimResult.group_hist
+        self.group_admits: dict = {}
+        self.bucket_hist: dict = {}     # {bucket (or exact P): admits}
         self._rid = itertools.count()
         self._steps = 0
+        self._jits = JitCache()
 
         # one vmapped decode: per-slot token + per-slot position. vmap
         # consumes the cache's batch dim (in_axes=1); decode_step expects an
@@ -72,11 +107,52 @@ class ContinuousBatcher:
             cache = jax.tree_util.tree_map(lambda a: a[:, 0], cache)
             return logits, cache
 
-        self._decode = jax.jit(jax.vmap(
-            one, in_axes=(None, 0, 1, 0), out_axes=(0, 1)))
-        self._prefill = jax.jit(
-            lambda params, batch, cache: registry.prefill(
-                params, cfg, batch, cache, q_chunk=64))
+        self._decode_fn = jax.vmap(one, in_axes=(None, 0, 1, 0),
+                                   out_axes=(0, 1))
+
+    # -- compile accounting --------------------------------------------
+    @property
+    def prefill_compiles(self) -> int:
+        """Distinct prefill programs traced. Bucketed admission bounds
+        this by ``len(self.buckets)``; the per-request oracle pays one
+        per distinct prompt length."""
+        return self._jits.count("prefill")
+
+    @property
+    def num_compiled(self) -> int:
+        return self._jits.num_compiled
+
+    # -- jitted entry points (shape-keyed in the shared JitCache) -------
+    def _prefill_fn(self, params, tokens, lengths):
+        """(B, S) right-padded tokens + (B,) true lengths -> per-row
+        last-real-token logits and a cache of sequence capacity S. The
+        cache is built inside the program, so each bucket allocates only
+        its own length."""
+        S = tokens.shape[1]
+        cache = registry.init_cache(self.cfg, tokens.shape[0], S,
+                                    self.cache_dtype)
+        # q-chunking partitions query rows only (each row's softmax runs
+        # against full K either way — bit-identical); power-of-two buckets
+        # chunk at 64, exact odd lengths fall back to one block
+        return registry.prefill(params, self.cfg, {"tokens": tokens}, cache,
+                                lengths=lengths,
+                                q_chunk=64 if S % 64 == 0 else S)
+
+    def _install_fn(self, full, group, slots):
+        """Scatter the first ``len(slots)`` rows of a group prefill cache
+        into the server cache's slots — one program per (bucket, m) shape.
+        Leaves whose trailing dims differ carry the sequence axis at dim 2
+        (K/V: (L, B, S, kv, hd)); only their first ``bucket`` positions
+        are written, the rest of the slot is causally dead anyway."""
+        m = slots.shape[0]
+
+        def leaf(f, g):
+            g = g[:, :m].astype(f.dtype)
+            if g.shape[2:] != f.shape[2:]:
+                return f.at[:, slots, :g.shape[2]].set(g)
+            return f.at[:, slots].set(g)
+
+        return jax.tree_util.tree_map(leaf, full, group)
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new: int = 16, eos_id=None) -> int:
@@ -85,28 +161,69 @@ class ContinuousBatcher:
         self.queue.append(req)
         return req.rid
 
-    def _admit(self):
-        for slot in range(self.max_slots):
-            if self.active[slot] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            req.slot = slot
+    def _prefill_group(self, bucket: int, items):
+        """One vmapped prefill for all (slot, request) pairs of a bucket,
+        padded to the fixed (max_slots, bucket) program shape with dummy
+        rows so group size never enters the compile key."""
+        m = len(items)
+        tokens = np.zeros((self.max_slots, bucket), np.int32)
+        lengths = np.ones((self.max_slots,), np.int32)
+        for j, (_, req) in enumerate(items):
             P = len(req.prompt)
-            assert P + req.max_new <= self.max_len, "request too long"
-            # prefill this request alone (B=1) and install into the slot
-            c1 = registry.init_cache(self.cfg, 1, self.max_len,
-                                     jax.tree_util.tree_leaves(
-                                         self.cache)[0].dtype)
-            logits, c1 = self._prefill(
-                self.params, {"tokens": jnp.asarray(req.prompt[None])}, c1)
-            self.cache = jax.tree_util.tree_map(
-                lambda full, one: full.at[:, slot].set(one[:, 0]),
-                self.cache, c1)
-            nxt = int(jnp.argmax(logits, axis=-1)[0])
-            req.out.append(nxt)
-            self.pos[slot] = P + self.cfg.prefix_len
-            self.last_tok[slot] = nxt
+            tokens[j, :P] = req.prompt
+            lengths[j] = P
+        logits, gcache = self._jits.call(
+            "prefill", self._prefill_fn, (),
+            (self.params, jnp.asarray(tokens), jnp.asarray(lengths)))
+        self._install(gcache, items, logits[:m], lengths[:m])
+        self.group_admits[m] = self.group_admits.get(m, 0) + 1
+        self.bucket_hist[bucket] = self.bucket_hist.get(bucket, 0) + 1
+
+    def _prefill_one(self, slot: int, req: Request):
+        """Parity oracle: exact-length, single-request prefill (compiles
+        once per distinct prompt length)."""
+        P = len(req.prompt)
+        logits, c1 = self._jits.call(
+            "prefill", self._prefill_fn, (),
+            (self.params, jnp.asarray(req.prompt[None]),
+             jnp.asarray([P], np.int32)))
+        self._install(c1, [(slot, req)], logits,
+                      np.asarray([P], np.int32))
+        self.group_admits[1] = self.group_admits.get(1, 0) + 1
+        self.bucket_hist[P] = self.bucket_hist.get(P, 0) + 1
+
+    def _install(self, gcache, items, logits, lengths):
+        slots = np.asarray([s for s, _ in items], np.int32)
+        self.cache = self._jits.call(
+            "install", self._install_fn, (0,),
+            (self.cache, gcache, jnp.asarray(slots)))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for j, (slot, req) in enumerate(items):
+            req.slot = slot
+            req.out.append(int(nxt[j]))
+            self.pos[slot] = int(lengths[j]) + self.cfg.prefix_len
+            self.last_tok[slot] = nxt[j]
             self.active[slot] = req
+
+    def _admit(self):
+        free = [s for s in range(self.max_slots) if self.active[s] is None]
+        take = min(len(free), len(self.queue))
+        if not take:
+            return
+        reqs = [self.queue.pop(0) for _ in range(take)]
+        for req in reqs:
+            assert len(req.prompt) + req.max_new <= self.max_len, \
+                "request too long"
+        if not self.buckets:
+            for slot, req in zip(free, reqs):
+                self._prefill_one(slot, req)
+            return
+        groups: dict = {}
+        for slot, req in zip(free, reqs):
+            b = bucket_for(len(req.prompt), self.min_bucket, self.max_len)
+            groups.setdefault(b, []).append((slot, req))
+        for b in sorted(groups):
+            self._prefill_group(b, groups[b])
 
     def _retire(self):
         for slot, req in enumerate(self.active):
@@ -120,12 +237,16 @@ class ContinuousBatcher:
         Returns the number of active slots that decoded."""
         self._retire()
         self._admit()
+        # a request can complete at admit time (max_new=1, or eos on the
+        # prefill token): retire it before decode or it would overshoot
+        self._retire()
         mask = np.array([r is not None for r in self.active])
         if not mask.any():
             return 0
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(self.last_tok), self.cache,
-            jnp.asarray(self.pos))
+        logits, self.cache = self._jits.call(
+            "decode", self._decode_fn, (2,),
+            (self.params, jnp.asarray(self.last_tok), self.cache,
+             jnp.asarray(self.pos)))
         nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
         for slot, req in enumerate(self.active):
             if req is None:

@@ -6,6 +6,15 @@ deployment implies (Table V measures per-device inference times).
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b \
         --reduced --batch 4 --prompt-len 32 --gen 16
+
+``--continuous`` switches to the slot-based continuous batcher
+(core/serving.py): a mixed-length request stream is served with
+bucketed prefill (``--prefill-buckets`` sets the smallest bucket;
+0 = per-request-length prefill) and the run reports compile counts —
+the bounded-compile discipline docs/serving.md documents.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m \
+        --reduced --continuous --requests 16 --prefill-buckets 8
 """
 from __future__ import annotations
 
@@ -21,14 +30,50 @@ from repro.configs import get_config
 from repro.models import registry
 
 
+def serve_continuous(cfg, args) -> int:
+    from repro.core.serving import ContinuousBatcher
+    rng = np.random.default_rng(args.seed)
+    params = registry.init_params(jax.random.PRNGKey(args.seed), cfg)
+    max_len = args.prompt_len + args.gen
+    srv = ContinuousBatcher(params, cfg, max_slots=args.batch,
+                            max_len=max_len,
+                            min_bucket=args.prefill_buckets)
+    lengths = rng.integers(1, args.prompt_len + 1, args.requests)
+    for n in lengths:
+        srv.submit(rng.integers(0, cfg.vocab_size, int(n), dtype=np.int32),
+                   max_new=args.gen)
+    t0 = time.perf_counter()
+    done = srv.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in done)
+    print(f"served {len(done)} requests ({len(set(map(int, lengths)))} "
+          f"distinct prompt lengths) in {dt:.2f}s "
+          f"({toks / max(dt, 1e-9):.1f} gen tok/s)")
+    print(f"prefill buckets: {list(srv.buckets) or 'off (per-length)'}")
+    print(f"compiles: prefill={srv.prefill_compiles} "
+          f"total={srv.num_compiled}")
+    print(f"admit group sizes {{size: count}}: {srv.group_admits}")
+    print(f"bucket use {{bucket: programs run}}: {srv.bucket_hist}")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-12b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="batch size; decode slots in --continuous mode")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="slot-based continuous batching over a "
+                         "mixed-length request stream")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="stream size in --continuous mode")
+    ap.add_argument("--prefill-buckets", type=int, default=8,
+                    help="smallest prefill bucket (power-of-two ladder up "
+                         "to max_len); 0 = per-request-length prefill")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -36,6 +81,8 @@ def main(argv=None):
         cfg = cfg.reduced()
     if cfg.family == "resnet3d":
         raise SystemExit("resnet3d is a clip classifier; use train.py")
+    if args.continuous:
+        return serve_continuous(cfg, args)
     print(f"serving {cfg.name} ({cfg.family}) batch={args.batch}")
 
     rng = np.random.default_rng(args.seed)

@@ -73,10 +73,13 @@ def lm_head_weight(params, cfg: ModelConfig):
 
 def _layer(cfg: ModelConfig, lp, x, window, positions, mode: str,
            cache=None, pos=0, q_chunk: int = 1024, moe_ctx=None,
-           cache_slice_window: int = 0):
+           cache_slice_window: int = 0, seq_lens=None):
     """One layer. mode: 'train' | 'prefill' | 'decode'.
 
-    Returns (x, aux_loss, new_cache).
+    Returns (x, aux_loss, new_cache).  ``seq_lens`` (B,) marks right-padded
+    bucketed-prefill rows: attention needs no mask (pad keys sit at
+    positions the causal mask already hides from real queries) but the SSM
+    recurrence does — see ``ssm_forward``.
     """
     aux = jnp.float32(0.0)
     new_cache: dict = {}
@@ -86,7 +89,8 @@ def _layer(cfg: ModelConfig, lp, x, window, positions, mode: str,
             return ssm_mod.ssm_decode_step(lp["ssm"], h, cfg.ssm,
                                            cache["ssm_state"],
                                            cache["conv_state"])
-        return ssm_mod.ssm_forward(lp["ssm"], h, cfg.ssm)
+        return ssm_mod.ssm_forward(lp["ssm"], h, cfg.ssm,
+                                   seq_lens=seq_lens)
 
     def run_attn(h):
         if mode == "train":
@@ -126,7 +130,8 @@ def _layer(cfg: ModelConfig, lp, x, window, positions, mode: str,
     h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
     if cfg.family == "moe":
         y, aux = moe_mod.moe_forward(lp["moe"], h2, cfg.moe, cfg.act,
-                                     moe_ctx=moe_ctx)
+                                     moe_ctx=moe_ctx,
+                                     dropless=mode != "train")
     else:
         y = mlp_mod.mlp_forward(lp["mlp"], h2, cfg.act)
     return x + y, aux, new_cache
@@ -321,7 +326,8 @@ def decode_step_ring(params, cfg: ModelConfig, token, cache, pos,
         if cfg.family != "ssm":
             h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
             if cfg.family == "moe":
-                y, _ = moe_mod.moe_forward(lp["moe"], h2, cfg.moe, cfg.act)
+                y, _ = moe_mod.moe_forward(lp["moe"], h2, cfg.moe, cfg.act,
+                                           dropless=True)
             else:
                 y = mlp_mod.mlp_forward(lp["mlp"], h2, cfg.act)
             x = x + y
@@ -353,14 +359,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     return c
 
 
-def _scan_cached(params, cfg, x, positions, cache, mode, pos, q_chunk):
+def _scan_cached(params, cfg, x, positions, cache, mode, pos, q_chunk,
+                 seq_lens=None):
     win = windows(cfg)
 
     def body(carry, xs):
         x, aux = carry
         lp, w, cl = xs
         x, a, nc = _layer(cfg, lp, x, w, positions, mode, cache=cl, pos=pos,
-                          q_chunk=q_chunk)
+                          q_chunk=q_chunk, seq_lens=seq_lens)
         return (x, aux + a), nc
 
     (x, _), new_cache = jax.lax.scan(
@@ -369,14 +376,35 @@ def _scan_cached(params, cfg, x, positions, cache, mode, pos, q_chunk):
 
 
 def prefill(params, cfg: ModelConfig, tokens, cache,
-            prefix_embeds=None, q_chunk: int = 1024, dtype=None):
-    """Fill the cache from position 0; returns (last_logits (B, V), cache)."""
+            prefix_embeds=None, q_chunk: int = 1024, dtype=None,
+            lengths=None):
+    """Fill the cache from position 0; returns (last_logits (B, V), cache).
+
+    ``lengths`` (B,) int32 enables *bucketed* prefill: each row's tokens
+    beyond lengths[b] are right-padding to a shared compile-friendly
+    sequence length. Logits are gathered at each row's last real position,
+    the SSM/conv states stop exactly there (see ``ssm_forward``), and the
+    pad keys written into the KV cache are causally invisible to every
+    real query and overwritten by decode before they could be attended —
+    outputs are bit-identical to an unpadded per-row prefill.
+    """
     x = embed_inputs(params, cfg, tokens, prefix_embeds, dtype)
     S = x.shape[1]
+    seq_lens = None
+    if lengths is not None:
+        seq_lens = jnp.asarray(lengths, jnp.int32)
+        if cfg.prefix_len and prefix_embeds is not None:
+            seq_lens = seq_lens + cfg.prefix_len
     x, cache = _scan_cached(params, cfg, x, jnp.arange(S), cache,
-                            "prefill", pos=0, q_chunk=q_chunk)
+                            "prefill", pos=0, q_chunk=q_chunk,
+                            seq_lens=seq_lens)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = jnp.einsum("bd,dv->bv", x[:, -1, :],
+    if seq_lens is None:
+        last = x[:, -1, :]
+    else:
+        last = jnp.take_along_axis(
+            x, (seq_lens - 1)[:, None, None], axis=1)[:, 0, :]
+    logits = jnp.einsum("bd,dv->bv", last,
                         lm_head_weight(params, cfg).astype(x.dtype))
     return logits, cache
 

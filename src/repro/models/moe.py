@@ -104,8 +104,18 @@ def _pmean(v, names):
     return v
 
 
-def moe_forward(p, x, moe: MoEConfig, act: str = "silu", moe_ctx=None):
-    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+def moe_forward(p, x, moe: MoEConfig, act: str = "silu", moe_ctx=None,
+                dropless: bool = False):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    ``dropless=True`` (inference: prefill/decode) sizes capacity at C = T
+    so no token is ever dropped: top_k picks *distinct* experts per token,
+    so an expert holds at most T assignments. Routing then has no
+    cross-token interaction at all — each token's output depends only on
+    its own router logits — which is what makes batched/bucketed serving
+    prefill bit-identical to single-request runs (docs/serving.md).
+    Capacity dropping stays a train-time load-balancing concern.
+    """
     B, S, d = x.shape
     T = B * S
     E, k = moe.num_experts, moe.top_k
@@ -113,7 +123,7 @@ def moe_forward(p, x, moe: MoEConfig, act: str = "silu", moe_ctx=None):
 
     if moe_ctx is None:
         # ---- local path (tests / single host) ----
-        C = capacity(T, moe)
+        C = T if dropless else capacity(T, moe)
         weights, slot, keep, frac, mean_p = _route(p["router"], xt, moe, C)
         x_rep = jnp.repeat(xt, k, axis=0)
         eb = _dispatch(x_rep, slot, E, C)

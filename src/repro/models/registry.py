@@ -83,6 +83,9 @@ def prefill(params, cfg: ModelConfig, batch: dict, cache, **kw):
         return lm.prefill(params, cfg, batch["tokens"], cache,
                           batch.get("prefix_embeds"), **kw)
     if cfg.family in ENCDEC_FAMILIES:
+        if kw.pop("lengths", None) is not None:
+            raise ValueError(
+                f"{cfg.family}: bucketed prefill (lengths=) is LM-only")
         return encdec.prefill(params, cfg, batch["src_embeds"], cache, **kw)
     raise ValueError(cfg.family)
 

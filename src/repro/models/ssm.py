@@ -114,10 +114,19 @@ def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, h0=None):
 
 
 def ssm_forward(p, x, ssm: SSMConfig, state=None, conv_state=None,
-                d_model: int | None = None):
+                d_model: int | None = None, seq_lens=None):
     """Full Mamba2 block (minus residual). x: (B, S, d).
 
     Training/prefill path. Returns (out, (ssm_state, conv_state)).
+
+    ``seq_lens`` (B,) int32 marks positions >= seq_lens[b] as right-padding
+    (bucketed prefill): their dt is zeroed — an *exact* no-op on the state
+    recurrence (decay exp(0)=1, contribution dt·x⊗B=0, the same mechanism
+    ``ssd_chunked`` uses for its own chunk padding) — and the returned
+    conv_state is gathered from the window ending at each row's last real
+    token instead of the (padded) end of the sequence.  Outputs at pad
+    positions are garbage; real positions and both states are bit-identical
+    to running the unpadded sequence.
     """
     B, S, d = x.shape
     di, nh, conv_dim = dims(d, ssm)
@@ -130,7 +139,16 @@ def ssm_forward(p, x, ssm: SSMConfig, state=None, conv_state=None,
     pad = jnp.zeros((B, ssm.d_conv - 1, conv_dim), xbc.dtype) \
         if conv_state is None else conv_state
     xbc_pad = jnp.concatenate([pad, xbc], axis=1)
-    new_conv_state = xbc_pad[:, -(ssm.d_conv - 1):, :]
+    if seq_lens is None:
+        new_conv_state = xbc_pad[:, -(ssm.d_conv - 1):, :]
+    else:
+        # window ending at each row's last real token: xbc_pad index
+        # d_conv-1+t holds input t, so inputs P-d_conv+1..P-1 live at
+        # indices P..P+d_conv-2
+        idx = (jnp.asarray(seq_lens, jnp.int32)[:, None]
+               + jnp.arange(ssm.d_conv - 1)[None, :])
+        new_conv_state = jnp.take_along_axis(xbc_pad, idx[:, :, None],
+                                             axis=1)
     acc = jnp.zeros_like(xbc)
     for i in range(ssm.d_conv):
         acc = acc + xbc_pad[:, i:i + S, :] \
@@ -141,6 +159,10 @@ def ssm_forward(p, x, ssm: SSMConfig, state=None, conv_state=None,
     xh = xs.reshape(B, S, nh, ssm.head_dim)
     dt = jax.nn.softplus(dt.astype(jnp.float32)
                          + p["dt_bias"].astype(jnp.float32))
+    if seq_lens is not None:
+        active = (jnp.arange(S)[None, :]
+                  < jnp.asarray(seq_lens, jnp.int32)[:, None])
+        dt = dt * active[..., None].astype(dt.dtype)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
 
     y, h_final = ssd_chunked(xh, dt, A, Bm, Cm, ssm.chunk, h0=state)

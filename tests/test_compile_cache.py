@@ -1,0 +1,61 @@
+"""Shared compile cache: bucketing math + jit-pool compile accounting."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core import compile_cache as cc
+from repro.core import fed_engine
+
+
+def test_next_pow2():
+    assert [cc.next_pow2(n) for n in (1, 2, 3, 4, 5, 17, 64)] \
+        == [1, 2, 4, 4, 8, 32, 64]
+    with pytest.raises(ValueError):
+        cc.next_pow2(0)
+
+
+def test_bucket_for_clamps_and_caps():
+    assert cc.bucket_for(1, 8, 64) == 8      # clamped up to min_bucket
+    assert cc.bucket_for(8, 8, 64) == 8
+    assert cc.bucket_for(9, 8, 64) == 16
+    assert cc.bucket_for(64, 8, 64) == 64
+    assert cc.bucket_for(40, 8, 48) == 48    # capped at non-pow2 max_len
+    with pytest.raises(ValueError):
+        cc.bucket_for(65, 8, 64)             # doesn't fit the cache
+    with pytest.raises(ValueError):
+        cc.bucket_for(0, 8, 64)
+
+
+def test_bucket_ladder_covers_every_bucket_for():
+    assert cc.bucket_ladder(8, 64) == (8, 16, 32, 64)
+    assert cc.bucket_ladder(8, 48) == (8, 16, 32, 48)
+    assert cc.bucket_ladder(8, 8) == (8,)
+    for min_bucket, max_len in ((8, 64), (4, 48), (16, 100)):
+        ladder = set(cc.bucket_ladder(min_bucket, max_len))
+        for P in range(1, max_len + 1):
+            assert cc.bucket_for(P, min_bucket, max_len) in ladder
+
+
+def test_jit_cache_counts_shapes_per_entry():
+    cache = cc.JitCache()
+
+    def dbl(x):
+        return x * 2
+
+    def neg(x):
+        return -x
+
+    cache.call("dbl", dbl, (), (jnp.zeros((2,)),))
+    cache.call("dbl", dbl, (), (jnp.zeros((3,)),))   # new shape, same entry
+    cache.call("dbl", dbl, (), (jnp.zeros((3,)),))   # cached
+    cache.call(("tag", 1), neg, (), (jnp.zeros((2,)),))
+    assert cache.count("dbl") == 2
+    assert cache.count("tag") == 1       # tuple-named entries match by head
+    assert cache.count("missing") == 0
+    assert cache.num_compiled == 3
+
+
+def test_fed_engine_runs_on_the_shared_cache():
+    """The engine's jit pool IS compile_cache.JitCache (the extraction
+    changed the import, not the behavior — parity/compile-count tests in
+    test_fed_engine.py pin the behavior itself)."""
+    assert fed_engine._JitCache is cc.JitCache

@@ -1,4 +1,11 @@
-"""Continuous-batching server: parity with single-request generation."""
+"""Continuous-batching server: parity with single-request generation.
+
+Bucketed prefill (the default) pads prompts to a power-of-two ladder and
+prefills same-tick admits as one vmapped program per bucket; every test
+here demands greedy outputs *bit-identical* to running each request alone
+(`generate_single`, which never pads), across all decoder-only LM families
+— dense, SWA-dense (gemma3 local:global pattern), MoE, SSM, hybrid.
+"""
 import numpy as np
 import pytest
 
@@ -9,19 +16,27 @@ from repro.configs import get_config
 from repro.core.serving import ContinuousBatcher, generate_single
 from repro.models import registry
 
+# one representative per decoder-only LM family / attention pattern
+LM_ARCHS = ["h2o-danube-3-4b",          # dense, full attention
+            "gemma3-12b",               # dense, 5:1 SWA local:global
+            "llama4-scout-17b-a16e",    # moe
+            "mamba2-130m",              # ssm
+            "hymba-1.5b"]               # hybrid (attn + ssm branches)
 
-@pytest.mark.parametrize("arch", ["h2o-danube-3-4b", "mamba2-130m",
-                                  "hymba-1.5b"])
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
 def test_continuous_batching_matches_single(arch, rng):
-    """Greedy outputs under slot batching == running each request alone,
-    despite different prompt lengths, admission times and retirements."""
+    """Greedy outputs under slot batching + bucketed prefill == running
+    each request alone, despite different prompt lengths, admission times
+    and retirements."""
     cfg = get_config(arch).reduced()
     params = registry.init_params(jax.random.PRNGKey(0), cfg)
     prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
                for n in (5, 9, 3, 7)]
     max_new = [6, 4, 8, 5]
 
-    srv = ContinuousBatcher(params, cfg, max_slots=2, max_len=64)
+    srv = ContinuousBatcher(params, cfg, max_slots=2, max_len=64,
+                            min_bucket=4)
     for p, m in zip(prompts, max_new):
         srv.submit(p, max_new=m)
     done = srv.run()
@@ -30,6 +45,72 @@ def test_continuous_batching_matches_single(arch, rng):
     for req, p, m in zip(done, prompts, max_new):
         ref = generate_single(params, cfg, p, m, max_len=64)
         assert req.out == ref, (req.rid, req.out, ref)
+
+
+def test_bucketed_compile_bound_and_parity(rng):
+    """A 16-request stream with 8 distinct prompt lengths compiles at most
+    len(buckets) prefill programs; the per-length oracle pays one compile
+    per distinct length; outputs are bit-identical between the two."""
+    cfg = get_config("h2o-danube-3-4b").reduced()
+    params = registry.init_params(jax.random.PRNGKey(3), cfg)
+    lengths = [3, 4, 5, 7, 9, 12, 17, 23] * 2
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lengths]
+
+    bucketed = ContinuousBatcher(params, cfg, max_slots=4, max_len=64,
+                                 min_bucket=4)
+    oracle = ContinuousBatcher(params, cfg, max_slots=4, max_len=64,
+                               min_bucket=0)
+    for p in prompts:
+        bucketed.submit(p, max_new=4)
+        oracle.submit(p, max_new=4)
+    outs_b = {r.rid: r.out for r in bucketed.run()}
+    outs_o = {r.rid: r.out for r in oracle.run()}
+    assert len(outs_b) == len(prompts)
+    assert outs_b == outs_o
+
+    assert bucketed.buckets == (4, 8, 16, 32, 64)
+    assert bucketed.prefill_compiles <= len(bucketed.buckets)
+    assert oracle.prefill_compiles == len(set(lengths))
+    # the admission fix: same-tick same-bucket admits batch as ONE program
+    assert any(size > 1 for size in bucketed.group_admits), \
+        bucketed.group_admits
+    assert set(oracle.group_admits) == {1}
+    assert sum(k * v for k, v in bucketed.group_admits.items()) \
+        == len(prompts)
+
+
+def test_max_new_one_does_not_overshoot(rng):
+    """A request done at admit time (max_new=1 / eos on the prefill token)
+    must retire before the same tick's decode."""
+    cfg = get_config("mamba2-130m").reduced()
+    params = registry.init_params(jax.random.PRNGKey(5), cfg)
+    prompt = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+    for min_bucket in (8, 0):
+        srv = ContinuousBatcher(params, cfg, max_slots=2, max_len=32,
+                                min_bucket=min_bucket)
+        srv.submit(prompt, max_new=1)
+        done = srv.run()
+        ref = generate_single(params, cfg, prompt, 1, max_len=32)
+        assert done[0].out == ref and len(ref) == 1
+
+
+def test_bucketed_group_admit_single_program(rng):
+    """Same-length same-tick admits land in one bucket group: exactly one
+    prefill program runs for the whole first wave."""
+    cfg = get_config("mamba2-130m").reduced()
+    params = registry.init_params(jax.random.PRNGKey(4), cfg)
+    srv = ContinuousBatcher(params, cfg, max_slots=4, max_len=32,
+                            min_bucket=8)
+    for _ in range(4):
+        srv.submit(rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                   max_new=3)
+    srv.step()
+    assert srv.group_admits == {4: 1}
+    assert srv.bucket_hist == {8: 1}
+    assert srv.prefill_compiles == 1
+    done = srv.run()
+    assert len(done) == 4
 
 
 def test_server_respects_slot_limit(rng):
