@@ -1,4 +1,4 @@
-"""Continuous serving: bucketed vs per-length prefill under a mixed stream.
+"""Continuous serving: bucketed vs per-length prefill, ring vs uniform decode.
 
 Embedded serving (paper Table V) lives on the same bounded-compile budget
 as the fed engine: every distinct prompt length that reaches an exact-
@@ -6,8 +6,11 @@ length prefill costs an XLA compile, and on an edge device compiles are
 seconds while decode steps are milliseconds. This bench drives the
 continuous batcher (core/serving.py) over a mixed-length request stream
 twice — per-request-length prefill (``min_bucket=0``) vs power-of-two
-bucketed prefill — and writes end-to-end throughput plus *prefill compile
-counts* to ``BENCH_serving.json``.
+bucketed prefill — and then compares *decode* modes on an SWA-patterned
+model: uniform decode streams the full ``(L, max_slots, max_len)`` cache
+every step, ring/bucketed decode reads W-slot ring buffers (SWA layers)
+plus a ladder-bucketed K-extent (full-attention layers). Throughput and
+compile counts land in ``BENCH_serving.json``.
 
     PYTHONPATH=src python -m benchmarks.run serving
     PYTHONPATH=src python -m benchmarks.serving_bench --smoke   # CI shapes
@@ -31,6 +34,13 @@ SERVE_CFG = ModelConfig(name="serve-bench-tiny", family="dense",
                         num_layers=2, d_model=64, num_heads=2,
                         num_kv_heads=2, d_ff=128, vocab_size=256)
 
+# gemma3-style local:global pattern at bench width: layer 0 SWA(w=8),
+# layer 1 global — exercises both per-layer-kind decode paths
+SWA_CFG = ModelConfig(name="serve-bench-swa", family="dense",
+                      num_layers=2, d_model=64, num_heads=2,
+                      num_kv_heads=2, d_ff=128, vocab_size=256,
+                      sliding_window=8, global_every=2)
+
 ARTIFACT = "BENCH_serving.json"
 
 
@@ -38,13 +48,27 @@ def _stream(rng, vocab: int, lengths) -> list:
     return [rng.integers(0, vocab, int(n), dtype=np.int32) for n in lengths]
 
 
-def _serve(params, cfg, prompts, *, max_slots, max_len, gen, min_bucket):
+def _serve(params, cfg, prompts, *, max_slots, max_len, gen, min_bucket,
+           decode_mode="ring", warm=False):
+    """Serve the stream once; with ``warm=True`` serve it twice and time
+    only the second pass — steady-state throughput with every program on
+    the ladder already compiled (the decode comparison's honest number;
+    the prefill comparison stays cold because compile cost IS its story).
+    """
     srv = ContinuousBatcher(params, cfg, max_slots=max_slots,
-                            max_len=max_len, min_bucket=min_bucket)
+                            max_len=max_len, min_bucket=min_bucket,
+                            decode_mode=decode_mode)
+    if warm:
+        for p in prompts:
+            srv.submit(p, max_new=gen)
+        srv.run()
+        # compile counts stay cumulative (programs ARE shared across
+        # passes) but admission stats report the timed pass only
+        srv.group_admits, srv.bucket_hist = {}, {}
     for p in prompts:
         srv.submit(p, max_new=gen)
     t0 = time.perf_counter()
-    done = srv.run()
+    done = srv.run()[-len(prompts):]
     dt = time.perf_counter() - t0
     assert len(done) == len(prompts)
     toks = sum(len(r.out) for r in done)
@@ -52,8 +76,10 @@ def _serve(params, cfg, prompts, *, max_slots, max_len, gen, min_bucket):
         "wall_s": dt,
         "gen_tok_per_s": toks / max(dt, 1e-9),
         "prefill_compiles": srv.prefill_compiles,
+        "decode_compiles": srv.decode_compiles,
         "total_compiles": srv.num_compiled,
         "n_buckets": len(srv.buckets),
+        "n_decode_buckets": len(srv.decode_buckets),
         "group_admits": {str(k): v for k, v in
                          sorted(srv.group_admits.items())},
         "outputs": [r.out for r in done],
@@ -84,6 +110,27 @@ def serving_bench(smoke: bool = False, out_json: str | None = ARTIFACT):
         "bucketed prefill changed greedy outputs"
     assert bucketed["prefill_compiles"] <= bucketed["n_buckets"]
 
+    # -- decode: uniform full-cache vs ring/bucketed, on the SWA model --
+    # decode-heavy stream (gen >> prompt) so the per-step cache traffic,
+    # not prefill, dominates the wall clock
+    dec_gen = gen * 3
+    dec_lengths = [max(1, n % (max_len - dec_gen)) for n in lengths]
+    dec_cfg = SWA_CFG
+    dec_params = registry.init_params(jax.random.PRNGKey(1), dec_cfg)
+    dec_prompts = _stream(np.random.default_rng(2), dec_cfg.vocab_size,
+                          dec_lengths)
+    dec_uniform = _serve(dec_params, dec_cfg, dec_prompts,
+                         max_slots=max_slots, max_len=max_len, gen=dec_gen,
+                         min_bucket=8, decode_mode="uniform", warm=True)
+    dec_ring = _serve(dec_params, dec_cfg, dec_prompts,
+                      max_slots=max_slots, max_len=max_len, gen=dec_gen,
+                      min_bucket=8, decode_mode="ring", warm=True)
+    assert dec_ring.pop("outputs") == dec_uniform.pop("outputs"), \
+        "ring/bucketed decode changed greedy outputs"
+    assert dec_uniform["decode_compiles"] == 1
+    assert dec_ring["decode_compiles"] <= max(1,
+                                              dec_ring["n_decode_buckets"])
+
     report = {
         "config": {"arch": cfg.name, "max_slots": max_slots,
                    "max_len": max_len, "gen": gen, "requests": n_req,
@@ -94,6 +141,16 @@ def serving_bench(smoke: bool = False, out_json: str | None = ARTIFACT):
         "prefill_compile_ratio":
             per_len["prefill_compiles"] / max(bucketed["prefill_compiles"],
                                               1),
+        "decode": {
+            "config": {"arch": dec_cfg.name,
+                       "sliding_window": dec_cfg.sliding_window,
+                       "gen": dec_gen, "requests": len(dec_prompts)},
+            "uniform": dec_uniform,
+            "ring": dec_ring,
+            "decode_tok_per_s_ratio":
+                dec_ring["gen_tok_per_s"]
+                / max(dec_uniform["gen_tok_per_s"], 1e-9),
+        },
     }
     rows = [
         ("serve_per_length", per_len["wall_s"] * 1e6,
@@ -103,6 +160,13 @@ def serving_bench(smoke: bool = False, out_json: str | None = ARTIFACT):
          f"{bucketed['gen_tok_per_s']:.1f} tok/s "
          f"{bucketed['prefill_compiles']} prefill compiles "
          f"(<= {bucketed['n_buckets']} buckets)"),
+        ("decode_uniform", dec_uniform["wall_s"] * 1e6,
+         f"{dec_uniform['gen_tok_per_s']:.1f} tok/s, full "
+         f"(L, slots, {max_len}) cache per step"),
+        ("decode_ring", dec_ring["wall_s"] * 1e6,
+         f"{dec_ring['gen_tok_per_s']:.1f} tok/s, W={dec_cfg.sliding_window}"
+         f" rings + K-extent ladder ({dec_ring['decode_compiles']} <= "
+         f"{dec_ring['n_decode_buckets']} decode compiles)"),
     ]
     for name, us, derived in rows:
         print(f"  {name}: {us / 1e6:.2f}s — {derived}")

@@ -18,15 +18,24 @@ they could be attended, the SSM recurrence treats pad steps as exact
 no-ops (dt=0), and logits gather at each row's last real token — greedy
 outputs are bit-identical to per-request serving (tested).
 
-Per-slot positions come from ``jax.vmap`` over the batch dim of the
-existing single-stream ``decode_step`` — every family (dense / SWA / MoE /
-SSM / hybrid) works unchanged. ``min_bucket=0`` keeps the legacy
+Decode runs per-layer-kind (``decode_mode="ring"``, the default): SWA
+layers keep W-slot ring buffers (O(window) HBM per step, and ~W/max_len
+the cache memory), full-attention layers attend against the first
+``k_ext`` positions of their uniform cache where ``k_ext`` is the active
+prefix bucketed on the same pow-2 ladder as prefill — so decode compiles
+at most ``len(ladder)`` programs and reads O(window / active prefix) HBM
+per step instead of streaming the whole ``(L, max_slots, max_len)``
+cache. ``decode_mode="uniform"`` keeps the legacy full-cache decode as a
+parity oracle. Per-slot positions come from ``jax.vmap`` over the batch
+dim of the single-stream step — every family (dense / SWA / MoE / SSM /
+hybrid) works in both modes. ``min_bucket=0`` keeps the legacy
 per-request-length admission as a parity oracle (and the bench's
 compile-count foil).
 """
 from __future__ import annotations
 
 import itertools
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -36,8 +45,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.compile_cache import JitCache, bucket_for, bucket_ladder
-from repro.models import registry
+from repro.models import lm, registry
 from repro.types import ModelConfig
+
+DECODE_MODES = ("ring", "uniform")
 
 
 @dataclass
@@ -65,24 +76,47 @@ class ContinuousBatcher:
     and ``prefill_compiles`` is bounded by ``len(self.buckets)``.
     ``min_bucket=0`` prefills each request alone at its exact length
     (one compile per distinct prompt length) — the parity oracle.
+
+    ``decode_mode="ring"`` (default) decodes on per-layer-kind caches:
+    W-slot ring buffers for SWA layers, a ladder-bucketed K-extent for
+    full-attention layers (``decode_compiles`` bounded by
+    ``len(self.decode_buckets)``). ``decode_mode="uniform"`` keeps the
+    legacy full-cache decode — the parity oracle.
     """
 
     def __init__(self, params, cfg: ModelConfig, max_slots: int = 4,
                  max_len: int = 256, dtype=jnp.float32,
-                 min_bucket: int = 8):
+                 min_bucket: int = 8, decode_mode: str = "ring"):
         if cfg.is_encdec or cfg.family == "resnet3d":
             raise ValueError(f"{cfg.family}: not a decoder-only server")
         if cfg.prefix_len:
             raise ValueError(
                 f"{cfg.name}: prefix-embedding (VLM/audio) serving needs "
                 "per-request prefix tensors, which Request does not carry")
+        if decode_mode not in DECODE_MODES:
+            raise ValueError(f"decode_mode {decode_mode!r} not in "
+                             f"{DECODE_MODES}")
         self.params, self.cfg = params, cfg
         self.max_slots, self.max_len = max_slots, max_len
         self.min_bucket = int(min_bucket)
         self.buckets = (bucket_ladder(self.min_bucket, max_len)
                         if self.min_bucket > 0 else ())
+        self.decode_mode = decode_mode
         self.cache_dtype = dtype
-        self.cache = registry.init_cache(cfg, max_slots, max_len, dtype)
+        attn_free = cfg.family == "ssm"
+        self._gl = () if attn_free else tuple(lm.global_layer_ids(cfg))
+        self._wl = () if attn_free else tuple(lm.swa_layer_ids(cfg))
+        if decode_mode == "ring":
+            self.cache = registry.init_ring_cache(cfg, max_slots, max_len,
+                                                  dtype)
+            # full-attention layers key one decode program per K-extent
+            # rung; SWA/SSM-only models decode as a single program
+            self.decode_buckets = (bucket_ladder(max(self.min_bucket, 1),
+                                                 max_len)
+                                   if self._gl else ())
+        else:
+            self.cache = registry.init_cache(cfg, max_slots, max_len, dtype)
+            self.decode_buckets = ()
         self.pos = np.zeros(max_slots, np.int32)        # next position
         self.last_tok = np.zeros(max_slots, np.int32)
         self.active: list[Optional[Request]] = [None] * max_slots
@@ -95,20 +129,31 @@ class ContinuousBatcher:
         self._rid = itertools.count()
         self._steps = 0
         self._jits = JitCache()
+        self._decode_fns: dict = {}     # {k_ext: vmapped ring decode}
+        self._decode_fn = (None if decode_mode == "ring"
+                           else self._make_decode(0))
 
-        # one vmapped decode: per-slot token + per-slot position. vmap
-        # consumes the cache's batch dim (in_axes=1); decode_step expects an
-        # explicit batch dim, so re-insert a size-1 one inside.
+    def _make_decode(self, k_ext: int):
+        """One vmapped decode: per-slot token + per-slot position. vmap
+        consumes the cache's batch dim (in_axes=1); the single-stream step
+        expects an explicit batch dim, so re-insert a size-1 one inside.
+        ``k_ext`` is the static K-extent full-attention layers attend
+        against in ring mode (one program per ladder rung)."""
+        cfg, ring = self.cfg, self.decode_mode == "ring"
+
         def one(params, token, cache, pos):
             cache = jax.tree_util.tree_map(
                 lambda a: jnp.expand_dims(a, 1), cache)
-            logits, cache = registry.decode_step(params, cfg, token[None],
-                                                 cache, pos)
+            if ring:
+                logits, cache = registry.decode_step_grouped(
+                    params, cfg, token[None], cache, pos, k_ext=k_ext)
+            else:
+                logits, cache = registry.decode_step(params, cfg,
+                                                     token[None], cache, pos)
             cache = jax.tree_util.tree_map(lambda a: a[:, 0], cache)
             return logits, cache
 
-        self._decode_fn = jax.vmap(one, in_axes=(None, 0, 1, 0),
-                                   out_axes=(0, 1))
+        return jax.vmap(one, in_axes=(None, 0, 1, 0), out_axes=(0, 1))
 
     # -- compile accounting --------------------------------------------
     @property
@@ -117,6 +162,13 @@ class ContinuousBatcher:
         this by ``len(self.buckets)``; the per-request oracle pays one
         per distinct prompt length."""
         return self._jits.count("prefill")
+
+    @property
+    def decode_compiles(self) -> int:
+        """Distinct decode programs traced. Ring mode bounds this by
+        ``max(1, len(self.decode_buckets))`` (one per K-extent rung a
+        stream actually reached); uniform mode compiles exactly one."""
+        return self._jits.count("decode")
 
     @property
     def num_compiled(self) -> int:
@@ -138,7 +190,7 @@ class ContinuousBatcher:
                                 lengths=lengths,
                                 q_chunk=64 if S % 64 == 0 else S)
 
-    def _install_fn(self, full, group, slots):
+    def _install_fn(self, full, group, slots, lengths):
         """Scatter the first ``len(slots)`` rows of a group prefill cache
         into the server cache's slots — one program per (bucket, m) shape.
         Leaves whose trailing dims differ carry the sequence axis at dim 2
@@ -154,10 +206,61 @@ class ContinuousBatcher:
 
         return jax.tree_util.tree_map(leaf, full, group)
 
+    def _install_ring_fn(self, full, group, slots, lengths):
+        """Scatter a *uniform* group-prefill cache (L-leading K/V of the
+        bucket's sequence extent) into the per-layer-kind server cache.
+
+        Full-attention layers copy their bucket prefix as before.  SWA
+        layers gather into ring layout per row (``lm.ring_source_positions``
+        — the latest prompt position congruent to each slot mod W).  Slots
+        whose position would be negative (prompt shorter than W) hold
+        clipped garbage; decode masks them by construction
+        (``ring_decode_attend`` recomputes each slot's absolute position
+        from ``pos`` and masks negatives)."""
+        m = slots.shape[0]
+        out = dict(full)
+        for key in ("ssm_state", "conv_state"):
+            if key in group:
+                out[key] = full[key].at[:, slots].set(
+                    group[key][:, :m].astype(full[key].dtype))
+        if "k" in group:
+            S_b = group["k"].shape[2]
+            if self._gl:
+                gi = jnp.asarray(self._gl)
+                for src, dst in (("k", "k"), ("v", "v")):
+                    g = group[src][gi][:, :m].astype(full[dst].dtype)
+                    out[dst] = full[dst].at[:, slots, :S_b].set(g)
+            if self._wl:
+                W = full["k_win"].shape[2]
+                p = lm.ring_source_positions(lengths[:m] - 1, W)
+                take = jnp.clip(p, 0, S_b - 1)[None, :, :, None, None]
+                wi = jnp.asarray(self._wl)
+                for src, dst in (("k", "k_win"), ("v", "v_win")):
+                    g = jnp.take_along_axis(
+                        group[src][wi][:, :m], take, axis=2)
+                    out[dst] = full[dst].at[:, slots].set(
+                        g.astype(full[dst].dtype))
+        return out
+
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new: int = 16, eos_id=None) -> int:
-        req = Request(next(self._rid), np.asarray(prompt, np.int32),
-                      max_new, eos_id)
+        """Queue one request. Rejects invalid requests *here*, with a
+        ``ValueError``, so a bad submit can never reach ``_admit`` and
+        kill the serving loop (the old in-loop ``assert`` discarded every
+        valid in-flight request — and vanished under ``python -O``)."""
+        prompt = np.asarray(prompt, np.int32)
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new} "
+                             "(prefill itself emits the first token)")
+        if prompt.ndim != 1:
+            raise ValueError(f"prompt must be 1-D, got shape {prompt.shape}")
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if prompt.size + max_new > self.max_len:
+            raise ValueError(
+                f"request too long: len(prompt)={prompt.size} + "
+                f"max_new={max_new} exceeds max_len={self.max_len}")
+        req = Request(next(self._rid), prompt, max_new, eos_id)
         self.queue.append(req)
         return req.rid
 
@@ -194,9 +297,12 @@ class ContinuousBatcher:
 
     def _install(self, gcache, items, logits, lengths):
         slots = np.asarray([s for s, _ in items], np.int32)
+        install = (self._install_ring_fn if self.decode_mode == "ring"
+                   else self._install_fn)
         self.cache = self._jits.call(
-            "install", self._install_fn, (0,),
-            (self.cache, gcache, jnp.asarray(slots)))
+            "install", install, (0,),
+            (self.cache, gcache, jnp.asarray(slots),
+             jnp.asarray(lengths, jnp.int32)))
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         for j, (slot, req) in enumerate(items):
             req.slot = slot
@@ -211,9 +317,6 @@ class ContinuousBatcher:
         if not take:
             return
         reqs = [self.queue.pop(0) for _ in range(take)]
-        for req in reqs:
-            assert len(req.prompt) + req.max_new <= self.max_len, \
-                "request too long"
         if not self.buckets:
             for slot, req in zip(free, reqs):
                 self._prefill_one(slot, req)
@@ -232,6 +335,17 @@ class ContinuousBatcher:
                 self.active[slot] = None
 
     # ------------------------------------------------------------------
+    def _decode_k_ext(self, mask) -> int:
+        """Static K-extent for this tick's full-attention decode: the
+        largest active slot's ``pos + 1`` bucketed on the pow-2 ladder —
+        so the traced programs are bounded by ``len(decode_buckets)``,
+        and every active row's prefix fits (pad rows are ``k_len``-masked
+        per slot, keeping the slice bit-identical to the full attend)."""
+        if not self.decode_buckets:
+            return 0
+        need = int(self.pos[mask].max()) + 1
+        return bucket_for(need, max(self.min_bucket, 1), self.max_len)
+
     def step(self) -> int:
         """One scheduler iteration: retire, admit, batched decode.
         Returns the number of active slots that decoded."""
@@ -243,8 +357,15 @@ class ContinuousBatcher:
         mask = np.array([r is not None for r in self.active])
         if not mask.any():
             return 0
+        if self.decode_mode == "ring":
+            k_ext = self._decode_k_ext(mask)
+            if k_ext not in self._decode_fns:
+                self._decode_fns[k_ext] = self._make_decode(k_ext)
+            name, fn = ("decode", k_ext), self._decode_fns[k_ext]
+        else:
+            name, fn = "decode", self._decode_fn
         logits, self.cache = self._jits.call(
-            "decode", self._decode_fn, (2,),
+            name, fn, (2,),
             (self.params, jnp.asarray(self.last_tok), self.cache,
              jnp.asarray(self.pos)))
         nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
@@ -257,8 +378,17 @@ class ContinuousBatcher:
         self._steps += 1
         return int(mask.sum())
 
+    def pending(self) -> list:
+        """Requests not yet completed: in-flight (slot order) + queued."""
+        return [r for r in self.active if r is not None] + list(self.queue)
+
     def run(self, max_iters: int = 10_000) -> list:
-        """Drive until queue + slots drain; returns completed requests."""
+        """Drive until queue + slots drain; returns completed requests.
+
+        If ``max_iters`` runs out first, the leftover requests are NOT
+        silently dropped: a ``RuntimeWarning`` reports how many are still
+        queued / in flight, and they stay reachable via ``pending()`` (a
+        later ``run()`` resumes them)."""
         for _ in range(max_iters):
             if not self.queue and all(r is None for r in self.active):
                 break
@@ -266,6 +396,15 @@ class ContinuousBatcher:
                 break
             self._retire()
         self._retire()
+        left = self.pending()
+        if left:
+            n_flight = sum(r is not None for r in self.active)
+            warnings.warn(
+                f"run(max_iters={max_iters}) exhausted with "
+                f"{len(left) - n_flight} queued + {n_flight} in-flight "
+                "requests unfinished — they remain in pending() and a "
+                "further run() resumes them", RuntimeWarning,
+                stacklevel=2)
         return sorted(self.completed, key=lambda r: r.rid)
 
 

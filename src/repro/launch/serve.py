@@ -10,11 +10,15 @@ deployment implies (Table V measures per-device inference times).
 ``--continuous`` switches to the slot-based continuous batcher
 (core/serving.py): a mixed-length request stream is served with
 bucketed prefill (``--prefill-buckets`` sets the smallest bucket;
-0 = per-request-length prefill) and the run reports compile counts —
-the bounded-compile discipline docs/serving.md documents.
+0 = per-request-length prefill) and per-layer-kind decode
+(``--decode-mode ring``: SWA ring buffers + ladder-bucketed K-extents;
+``--decode-mode uniform`` streams the full cache, the parity oracle).
+The run reports compile counts — the bounded-compile discipline
+docs/serving.md documents.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m \
-        --reduced --continuous --requests 16 --prefill-buckets 8
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b \
+        --reduced --continuous --requests 16 --prefill-buckets 8 \
+        --decode-mode ring
 """
 from __future__ import annotations
 
@@ -37,7 +41,8 @@ def serve_continuous(cfg, args) -> int:
     max_len = args.prompt_len + args.gen
     srv = ContinuousBatcher(params, cfg, max_slots=args.batch,
                             max_len=max_len,
-                            min_bucket=args.prefill_buckets)
+                            min_bucket=args.prefill_buckets,
+                            decode_mode=args.decode_mode)
     lengths = rng.integers(1, args.prompt_len + 1, args.requests)
     for n in lengths:
         srv.submit(rng.integers(0, cfg.vocab_size, int(n), dtype=np.int32),
@@ -50,8 +55,10 @@ def serve_continuous(cfg, args) -> int:
           f"distinct prompt lengths) in {dt:.2f}s "
           f"({toks / max(dt, 1e-9):.1f} gen tok/s)")
     print(f"prefill buckets: {list(srv.buckets) or 'off (per-length)'}")
+    print(f"decode mode: {srv.decode_mode} (K-extent ladder: "
+          f"{list(srv.decode_buckets) or 'n/a (single program)'})")
     print(f"compiles: prefill={srv.prefill_compiles} "
-          f"total={srv.num_compiled}")
+          f"decode={srv.decode_compiles} total={srv.num_compiled}")
     print(f"admit group sizes {{size: count}}: {srv.group_admits}")
     print(f"bucket use {{bucket: programs run}}: {srv.bucket_hist}")
     return 0
@@ -74,6 +81,11 @@ def main(argv=None):
     ap.add_argument("--prefill-buckets", type=int, default=8,
                     help="smallest prefill bucket (power-of-two ladder up "
                          "to max_len); 0 = per-request-length prefill")
+    ap.add_argument("--decode-mode", choices=["ring", "uniform"],
+                    default="ring",
+                    help="ring: per-layer-kind decode caches (SWA ring "
+                         "buffers + ladder-bucketed K-extents); uniform: "
+                         "legacy full-cache decode (parity oracle)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)

@@ -141,7 +141,7 @@ def positions_like(pos):
 
 def attn_forward(p, x, *, cfg, window, positions, causal=True,
                  cache=None, cache_index=None, q_chunk=1024,
-                 cache_slice_window: int = 0):
+                 cache_slice_window: int = 0, k_extent: int = 0):
     """One attention layer (params already per-layer, no leading L).
 
     cache: optional dict {"k": (B, S_max, KV, D), "v": ...} updated at
@@ -151,6 +151,14 @@ def attn_forward(p, x, *, cfg, window, positions, causal=True,
     dynamic-slice of the cache covering the last ``window`` positions
     instead of the whole buffer — SWA layers then read O(window) HBM per
     step instead of O(S_max) (§Perf optimization, beyond-paper).
+
+    ``k_extent`` (static, decode only): attend against the first
+    ``k_extent`` cache positions instead of all S_max — full-attention
+    layers then read O(active prefix) HBM per step. The cache itself
+    stays S_max (the update is in place); only the attend is sliced.
+    Requires ``k_extent >= cache_index + Sq`` and is then bit-identical
+    to the unsliced attend: the dropped positions are exactly the ones
+    the ``k_len`` mask already zeroes.
     """
     B, Sq, d = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -179,6 +187,11 @@ def attn_forward(p, x, *, cfg, window, positions, causal=True,
             out = gqa_attention(q, ks, vs, window=window, causal=causal,
                                 q_offset=idx, k_offset=start,
                                 k_len=idx + Sq, q_chunk=q_chunk)
+        elif k_extent and k_extent < ck.shape[1]:
+            ks = jax.lax.slice_in_dim(ck, 0, k_extent, axis=1)
+            vs = jax.lax.slice_in_dim(cv, 0, k_extent, axis=1)
+            out = gqa_attention(q, ks, vs, window=window, causal=causal,
+                                q_offset=idx, k_len=idx + Sq, q_chunk=q_chunk)
         else:
             out = gqa_attention(q, ck, cv, window=window, causal=causal,
                                 q_offset=idx, k_len=idx + Sq, q_chunk=q_chunk)

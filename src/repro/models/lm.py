@@ -73,13 +73,19 @@ def lm_head_weight(params, cfg: ModelConfig):
 
 def _layer(cfg: ModelConfig, lp, x, window, positions, mode: str,
            cache=None, pos=0, q_chunk: int = 1024, moe_ctx=None,
-           cache_slice_window: int = 0, seq_lens=None):
+           cache_slice_window: int = 0, k_extent: int = 0, seq_lens=None):
     """One layer. mode: 'train' | 'prefill' | 'decode'.
 
     Returns (x, aux_loss, new_cache).  ``seq_lens`` (B,) marks right-padded
     bucketed-prefill rows: attention needs no mask (pad keys sit at
     positions the causal mask already hides from real queries) but the SSM
     recurrence does — see ``ssm_forward``.
+
+    The attention cache may be uniform (``{"k", "v"}`` of capacity S_max)
+    or a ring buffer (``{"k_win", "v_win"}`` of capacity W, decode only —
+    see ``init_ring_cache``); ``new_cache`` mirrors whichever layout came
+    in. ``k_extent`` (static) bounds the K-extent a uniform-cache decode
+    attends against (see ``attn_forward``).
     """
     aux = jnp.float32(0.0)
     new_cache: dict = {}
@@ -97,12 +103,18 @@ def _layer(cfg: ModelConfig, lp, x, window, positions, mode: str,
             return attn_mod.attn_forward(lp["attn"], h, cfg=cfg,
                                          window=window, positions=positions,
                                          q_chunk=q_chunk)
+        if "k_win" in cache:     # ring-buffer SWA decode
+            a, (rk, rv) = attn_mod.ring_decode_attend(
+                lp["attn"], h, cfg=cfg, ring_k=cache["k_win"],
+                ring_v=cache["v_win"], pos=pos, window=window)
+            return a, {"k_win": rk, "v_win": rv}
         attn_cache = {"k": cache["k"], "v": cache["v"]}
         idx = 0 if mode == "prefill" else pos
         return attn_mod.attn_forward(lp["attn"], h, cfg=cfg, window=window,
                                      positions=positions, cache=attn_cache,
                                      cache_index=idx, q_chunk=q_chunk,
-                                     cache_slice_window=cache_slice_window)
+                                     cache_slice_window=cache_slice_window,
+                                     k_extent=k_extent)
 
     if cfg.family == "ssm":
         h = rms_norm(x, lp["ln1"], cfg.norm_eps)
@@ -119,13 +131,12 @@ def _layer(cfg: ModelConfig, lp, x, window, positions, mode: str,
                        + rms_norm(s, lp["branch_norm_ssm"], cfg.norm_eps))
         x = x + mixed.astype(x.dtype)
         if mode != "train":
-            new_cache = {"k": ac["k"], "v": ac["v"],
-                         "ssm_state": st, "conv_state": cs}
+            new_cache = {**ac, "ssm_state": st, "conv_state": cs}
     else:
         a, ac = run_attn(h)
         x = x + a
         if mode != "train":
-            new_cache = {"k": ac["k"], "v": ac["v"]}
+            new_cache = dict(ac)
 
     h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
     if cfg.family == "moe":
@@ -225,7 +236,9 @@ def init_ring_cache(cfg: ModelConfig, batch: int, max_len: int,
     """Decode cache with per-layer-kind sizing: full-attention layers get
     ``max_len`` buffers; SWA layers get ring buffers of their window —
     for gemma3 (5 local : 1 global, w=1024, S=32k) this is 5.1× less cache
-    memory and HBM traffic than the uniform cache (beyond-paper §Perf)."""
+    memory and HBM traffic than the uniform cache (beyond-paper §Perf).
+    Rings are capped at ``max_len`` — positions never exceed it, so a
+    window wider than the cache would only buy dead slots."""
     L = cfg.num_layers
     c: dict = {}
     if cfg.family in ("dense", "moe", "hybrid", "vlm"):
@@ -235,7 +248,7 @@ def init_ring_cache(cfg: ModelConfig, batch: int, max_len: int,
             c["k"] = jnp.zeros((len(gl), batch, max_len, kv, hd), dtype)
             c["v"] = jnp.zeros((len(gl), batch, max_len, kv, hd), dtype)
         if wl:
-            W = cfg.sliding_window
+            W = min(cfg.sliding_window, max_len)
             c["k_win"] = jnp.zeros((len(wl), batch, W, kv, hd), dtype)
             c["v_win"] = jnp.zeros((len(wl), batch, W, kv, hd), dtype)
     if cfg.family in ("ssm", "hybrid"):
@@ -245,6 +258,18 @@ def init_ring_cache(cfg: ModelConfig, batch: int, max_len: int,
         c["conv_state"] = jnp.zeros((L, batch, cfg.ssm.d_conv - 1, conv_dim),
                                     dtype)
     return c
+
+
+def ring_source_positions(last, W: int) -> jnp.ndarray:
+    """Absolute position each W-ring slot holds once position ``last``
+    has been written: slot ``s`` holds the latest ``p <= last`` with
+    ``p ≡ s (mod W)``; negative = never written (decode masks those).
+    ``last`` may be a scalar or a ``(B,)`` batch (a trailing slot axis is
+    appended) — the ONE definition of the ring layout, shared by cache
+    conversion, serving install, and (transposed) the decode-side mask in
+    ``attention.ring_decode_attend``."""
+    last = jnp.asarray(last, jnp.int32)[..., None]
+    return last - jnp.mod(last - jnp.arange(W), W)
 
 
 def to_ring_cache(cfg: ModelConfig, cache: dict, pos) -> dict:
@@ -258,10 +283,8 @@ def to_ring_cache(cfg: ModelConfig, cache: dict, pos) -> dict:
             out["k"] = cache["k"][idx]
             out["v"] = cache["v"][idx]
         if wl:
-            W = cfg.sliding_window
-            last = pos - 1
-            s_idx = jnp.arange(W)
-            p_of_slot = last - jnp.mod(last - s_idx, W)
+            W = min(cfg.sliding_window, cache["k"].shape[2])
+            p_of_slot = ring_source_positions(pos - 1, W).reshape(W)
             take = jnp.clip(p_of_slot, 0, cache["k"].shape[2] - 1)
             widx = jnp.asarray(wl)
             out["k_win"] = jnp.take(cache["k"][widx], take, axis=2)
@@ -337,6 +360,87 @@ def decode_step_ring(params, cfg: ModelConfig, token, cache, pos,
             new_cache[key] = new_cache[key].at[j].set(
                 val.astype(new_cache[key].dtype))
     cache = new_cache
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, 0, :],
+                        lm_head_weight(params, cfg).astype(x.dtype))
+    return logits, cache
+
+
+def _kind_runs(cfg: ModelConfig):
+    """Contiguous same-kind layer runs, in layer order:
+    ``[("swa" | "full", [layer ids]), ...]``.
+
+    ``decode_step_ring`` python-unrolls all L layers, which makes the
+    decode program (and its compile) O(L).  Grouping by kind instead lets
+    each run scan its layers as ONE program body — every SWA layer shares
+    the static window W and every full layer the uniform cache, so within
+    a run the layer stack is scan-homogeneous.  gemma3's 5:1 local:global
+    pattern yields ~L/5 runs of two alternating kinds.
+    """
+    runs: list = []
+    for i in range(cfg.num_layers):
+        kind = "swa" if cfg.window_for_layer(i) > 0 else "full"
+        if runs and runs[-1][0] == kind:
+            runs[-1][1].append(i)
+        else:
+            runs.append((kind, [i]))
+    return runs
+
+
+def decode_step_grouped(params, cfg: ModelConfig, token, cache, pos,
+                        k_ext: int = 0, dtype=None):
+    """One decode step against an ``init_ring_cache`` layout, scanning
+    contiguous same-kind layer runs (``_kind_runs``).
+
+    SWA layers attend against their W-slot ring buffers
+    (``ring_decode_attend`` — O(W) HBM per step); full-attention layers
+    update their uniform cache in place and attend against its first
+    ``k_ext`` positions (0 = all of them), masked at ``pos + 1`` — with
+    ``k_ext >= pos + 1`` that is bit-identical to the unsliced attend,
+    and O(k_ext) HBM per step.  Unlike ``decode_step_ring`` this is
+    vmap/scan-friendly: the program is O(#runs), not O(L), so a serving
+    batcher can vmap it over a slot batch without an L-times-unrolled
+    trace.  Greedy tokens match ``decode_step`` (SWA softmax sums run in
+    ring order, so floats may differ in the last ulp).
+    """
+    if cfg.family == "ssm":      # no attention: ring layout == uniform
+        return decode_step(params, cfg, token, cache, pos, dtype=dtype)
+    x = params["embed"][token][:, None, :]
+    if dtype is not None:
+        x = x.astype(dtype)
+    positions = pos + jnp.zeros((1,), jnp.int32)
+    wmap = {layer: j for j, layer in enumerate(swa_layer_ids(cfg))}
+    gmap = {layer: j for j, layer in enumerate(global_layer_ids(cfg))}
+    has_ssm = cfg.family == "hybrid"
+    outs: dict = {key: [] for key in cache}
+    for kind, ids in _kind_runs(cfg):
+        i0, i1 = ids[0], ids[-1] + 1
+        lp = jax.tree_util.tree_map(lambda a: a[i0:i1], params["layers"])
+        if kind == "swa":
+            j0, j1 = wmap[ids[0]], wmap[ids[-1]] + 1
+            cl = {"k_win": cache["k_win"][j0:j1],
+                  "v_win": cache["v_win"][j0:j1]}
+            win = jnp.full((len(ids),), cfg.sliding_window, jnp.int32)
+        else:
+            j0, j1 = gmap[ids[0]], gmap[ids[-1]] + 1
+            cl = {"k": cache["k"][j0:j1], "v": cache["v"][j0:j1]}
+            win = jnp.zeros((len(ids),), jnp.int32)
+        if has_ssm:
+            cl["ssm_state"] = cache["ssm_state"][i0:i1]
+            cl["conv_state"] = cache["conv_state"][i0:i1]
+
+        def body(x, xs, _kind=kind):
+            lp_i, w_i, cl_i = xs
+            x, _, nc = _layer(cfg, lp_i, x, w_i, positions, "decode",
+                              cache=cl_i, pos=pos, q_chunk=1,
+                              k_extent=k_ext if _kind == "full" else 0)
+            return x, nc
+
+        x, ncs = jax.lax.scan(body, x, (lp, win, cl))
+        for key, val in ncs.items():
+            outs[key].append(val.astype(cache[key].dtype))
+    cache = {key: (vals[0] if len(vals) == 1 else jnp.concatenate(vals, 0))
+             for key, vals in outs.items()}
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = jnp.einsum("bd,dv->bv", x[:, 0, :],
                         lm_head_weight(params, cfg).astype(x.dtype))

@@ -78,6 +78,23 @@ def decode_step(params, cfg: ModelConfig, token, cache, pos, **kw):
     raise ValueError(cfg.family)
 
 
+def init_ring_cache(cfg: ModelConfig, batch: int, seq_len: int,
+                    dtype=jnp.bfloat16):
+    """Per-layer-kind decode cache: W-slot ring buffers for SWA layers,
+    ``seq_len`` buffers for full-attention layers (LM families only)."""
+    if cfg.family in LM_FAMILIES:
+        return lm.init_ring_cache(cfg, batch, seq_len, dtype)
+    raise ValueError(f"{cfg.family}: no ring decode cache")
+
+
+def decode_step_grouped(params, cfg: ModelConfig, token, cache, pos, **kw):
+    """Scan-grouped decode against an ``init_ring_cache`` layout; ``k_ext``
+    (static) bounds the K-extent full-attention layers attend against."""
+    if cfg.family in LM_FAMILIES:
+        return lm.decode_step_grouped(params, cfg, token, cache, pos, **kw)
+    raise ValueError(f"{cfg.family}: no grouped ring decode")
+
+
 def prefill(params, cfg: ModelConfig, batch: dict, cache, **kw):
     if cfg.family in LM_FAMILIES:
         return lm.prefill(params, cfg, batch["tokens"], cache,

@@ -1,10 +1,12 @@
 """Continuous-batching server: parity with single-request generation.
 
 Bucketed prefill (the default) pads prompts to a power-of-two ladder and
-prefills same-tick admits as one vmapped program per bucket; every test
-here demands greedy outputs *bit-identical* to running each request alone
-(`generate_single`, which never pads), across all decoder-only LM families
-— dense, SWA-dense (gemma3 local:global pattern), MoE, SSM, hybrid.
+prefills same-tick admits as one vmapped program per bucket; ring decode
+(the default) keeps W-slot ring buffers for SWA layers and ladder-bucketed
+K-extents for full-attention layers. Every test here demands greedy
+outputs *bit-identical* to running each request alone (`generate_single`,
+which never pads or rings), across all decoder-only LM families — dense,
+SWA-dense (gemma3 local:global pattern), MoE, SSM, hybrid.
 """
 import numpy as np
 import pytest
@@ -41,6 +43,7 @@ def test_continuous_batching_matches_single(arch, rng):
         srv.submit(p, max_new=m)
     done = srv.run()
     assert len(done) == 4
+    assert srv.decode_compiles <= max(1, len(srv.decode_buckets))
 
     for req, p, m in zip(done, prompts, max_new):
         ref = generate_single(params, cfg, p, m, max_len=64)
@@ -126,6 +129,135 @@ def test_server_respects_slot_limit(rng):
     done = srv.run()
     assert len(done) == 5
     assert all(len(r.out) == 3 for r in done)
+
+
+@pytest.mark.parametrize("arch", ["gemma3-12b", "hymba-1.5b",
+                                  "llama4-scout-17b-a16e"])
+def test_ring_decode_matches_uniform(arch, rng):
+    """Per-layer-kind decode (SWA ring buffers + ladder-bucketed K-extent)
+    == the uniform full-cache decode, greedily, over a mixed stream; ring
+    decode compiles stay on the K-extent ladder, uniform compiles once."""
+    cfg = get_config(arch).reduced()
+    params = registry.init_params(jax.random.PRNGKey(7), cfg)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 9, 13, 3)]
+    max_new = [10, 6, 4, 8]
+
+    outs = {}
+    for mode in ("ring", "uniform"):
+        srv = ContinuousBatcher(params, cfg, max_slots=2, max_len=64,
+                                min_bucket=4, decode_mode=mode)
+        for p, m in zip(prompts, max_new):
+            srv.submit(p, max_new=m)
+        outs[mode] = {r.rid: r.out for r in srv.run()}
+        if mode == "uniform":
+            assert srv.decode_compiles == 1
+            assert srv.decode_buckets == ()
+        else:
+            assert srv.decode_compiles <= max(1, len(srv.decode_buckets))
+    assert outs["ring"] == outs["uniform"]
+
+
+def test_ring_decode_wraps_past_window(rng):
+    """Generations running far past a small sliding window W: the ring
+    wraps (slot reuse, install gather of only the last W prompt tokens)
+    and still matches uniform decode and generate_single greedily."""
+    from repro.types import ModelConfig
+    cfg = ModelConfig(name="tiny-swa", family="dense", num_layers=2,
+                      d_model=64, num_heads=2, num_kv_heads=2, d_ff=128,
+                      vocab_size=256, sliding_window=8, global_every=2)
+    params = registry.init_params(jax.random.PRNGKey(12), cfg)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (3, 17)]                  # 17 > W: install wraps
+    outs = {}
+    for mode in ("ring", "uniform"):
+        srv = ContinuousBatcher(params, cfg, max_slots=2, max_len=64,
+                                min_bucket=4, decode_mode=mode)
+        for p in prompts:
+            srv.submit(p, max_new=30)             # pos runs to ~47 >> W
+        outs[mode] = {r.rid: r.out for r in srv.run()}
+    assert outs["ring"] == outs["uniform"]
+    for rid, p in enumerate(prompts):
+        ref = generate_single(params, cfg, p, 30, max_len=64)
+        assert outs["ring"][rid] == ref
+
+
+def test_decode_compile_count_bounded_by_ladder(rng):
+    """Generations long enough to cross several K-extent rungs still
+    compile at most len(decode_buckets) decode programs (hymba: global +
+    SWA + SSM layers all in play), with outputs matching the oracle."""
+    cfg = get_config("hymba-1.5b").reduced()
+    params = registry.init_params(jax.random.PRNGKey(8), cfg)
+    lengths, max_new = (3, 9, 21), (20, 12, 30)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lengths]
+
+    srv = ContinuousBatcher(params, cfg, max_slots=2, max_len=64,
+                            min_bucket=4, decode_mode="ring")
+    for p, m in zip(prompts, max_new):
+        srv.submit(p, max_new=m)
+    done = srv.run()
+    assert srv.decode_buckets == (4, 8, 16, 32, 64)
+    assert 2 <= srv.decode_compiles <= len(srv.decode_buckets)
+    for req, p, m in zip(done, prompts, max_new):
+        assert req.out == generate_single(params, cfg, p, m, max_len=64)
+
+
+def test_submit_rejects_oversized_without_killing_server(rng):
+    """An oversized request fails at submit() with ValueError (not a
+    mid-run assert) and valid in-flight requests keep serving."""
+    cfg = get_config("mamba2-130m").reduced()
+    params = registry.init_params(jax.random.PRNGKey(9), cfg)
+    prompt = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+    srv = ContinuousBatcher(params, cfg, max_slots=2, max_len=32)
+    good = srv.submit(prompt, max_new=4)
+    srv.step()                               # good request is in flight
+    with pytest.raises(ValueError, match="too long"):
+        srv.submit(rng.integers(0, cfg.vocab_size, 30).astype(np.int32),
+                   max_new=8)                # 30 + 8 > 32
+    with pytest.raises(ValueError, match="empty"):
+        srv.submit(np.zeros((0,), np.int32), max_new=4)
+    with pytest.raises(ValueError, match="1-D"):
+        srv.submit(np.zeros((2, 3), np.int32), max_new=4)
+    with pytest.raises(ValueError, match="1-D"):
+        srv.submit(np.int32(7), max_new=4)
+    done = srv.run()
+    assert [r.rid for r in done] == [good]
+    assert done[0].out == generate_single(params, cfg, prompt, 4,
+                                          max_len=32)
+
+
+def test_submit_rejects_max_new_zero(rng):
+    """max_new=0 used to prefill anyway and emit 1 token (prefill's argmax
+    lands in out before Request.done is consulted); now it never enters."""
+    cfg = get_config("mamba2-130m").reduced()
+    params = registry.init_params(jax.random.PRNGKey(10), cfg)
+    srv = ContinuousBatcher(params, cfg, max_slots=2, max_len=32)
+    with pytest.raises(ValueError, match="max_new"):
+        srv.submit(rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                   max_new=0)
+    assert srv.queue == [] and srv.run() == []
+
+
+def test_run_exhaustion_surfaces_pending(rng):
+    """run(max_iters) running out no longer silently drops queued and
+    in-flight requests: it warns, pending() lists them, and a later run()
+    resumes them to the same greedy outputs."""
+    cfg = get_config("mamba2-130m").reduced()
+    params = registry.init_params(jax.random.PRNGKey(11), cfg)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (4, 6, 5)]
+    srv = ContinuousBatcher(params, cfg, max_slots=1, max_len=32)
+    for p in prompts:
+        srv.submit(p, max_new=6)
+    with pytest.warns(RuntimeWarning, match="exhausted"):
+        done = srv.run(max_iters=2)
+    assert len(done) < 3
+    assert len(done) + len(srv.pending()) == 3
+    done = srv.run()                          # resumes, no warning
+    assert len(done) == 3 and srv.pending() == []
+    for req, p in zip(done, prompts):
+        assert req.out == generate_single(params, cfg, p, 6, max_len=32)
 
 
 def test_eos_early_stop(rng):
