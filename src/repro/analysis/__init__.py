@@ -1,0 +1,12 @@
+"""Static analysis for the compiled hot paths (repro-lint).
+
+``repro.analysis.lint`` is the rule engine; ``tools/repro_lint.py`` is the
+CLI that runs it against the tree with the baseline in
+``tools/lint_baseline.json``. See docs/static_analysis.md.
+"""
+from repro.analysis.lint import (Finding, RULES, scan_paths, scan_sources,
+                                 load_baseline, make_baseline,
+                                 mark_baselined)
+
+__all__ = ["Finding", "RULES", "scan_paths", "scan_sources",
+           "load_baseline", "make_baseline", "mark_baselined"]

@@ -1,0 +1,784 @@
+"""repro-lint: JAX-aware static analysis that locks in the hot-path rules.
+
+PRs 1-5 earned their speedups by enforcing invariants by hand — every jit
+funnels through ``core.compile_cache.JitCache`` so compiles stay counted
+and bounded, host syncs happen once per group instead of once per
+iteration, donated buffers are never touched again, and library code never
+guards correctness behind a bare ``assert`` (it vanishes under
+``python -O``). Nothing checked those invariants, so any refactor could
+silently regress them. This module turns them into AST-level rules:
+
+R1  recompile hazards
+    Direct ``jax.jit`` (or ``functools.partial(jax.jit, ...)``) in library
+    code bypassing ``JitCache``; ``jit`` invocations inside ``for``/
+    ``while`` bodies (a fresh wrapper per pass retraces every pass); and
+    Python scalars (``len(x)``, ``x.shape[i]``, ``int(...)``) flowing as
+    arguments into locally-jitted entry points — every distinct value
+    retraces, so the value belongs in a declared bucket/compile key or in
+    a traced array.
+
+R2  host-sync points in traced context
+    ``.item()``, ``int()/float()/bool()`` on non-constant values,
+    ``np.asarray``/``np.array`` and ``jax.device_get`` inside functions
+    reachable from ``lax.scan``/``vmap``/jitted bodies (a call-graph walk
+    over the scanned tree), plus ``if`` statements on (non-static)
+    parameters of directly-traced functions. Scalar conversions of
+    ``.shape``/``len()`` expressions are trace-time constants and exempt.
+
+R3  donation misuse
+    A name donated to XLA (``JitCache.call`` donate tuples, immediately-
+    invoked ``jax.jit(..., donate_argnums=...)``, or the engines'
+    ``donate=``/``donate_params=True`` keywords) and then read later in
+    the same scope — its buffer may already be reused. The check is
+    linear within a statement list (no loop-back-edge analysis); a
+    statement that rebinds the name clears it.
+
+R4  dead public API / drift
+    Public functions of the kernel package (``repro/kernels/*.py``) and
+    the model registry (``models/registry.py``) referenced from no other
+    scanned module — i.e. only from comments/docstrings or from outside
+    the library. Proves (and tracks, via the baseline) the orphaned
+    Pallas kernels the ROADMAP wants fused into serving.
+
+R5  bare ``assert`` in library code
+    Disabled under ``python -O`` — the exact bug class PR 5 fixed in
+    ``serving._admit``. Library invariants raise ``ValueError``/
+    ``RuntimeError``.
+
+Suppression: append ``# repro-lint: disable=R1`` (comma-separate multiple
+rules, or ``disable=all``) to the offending line, or put the comment alone
+on the line directly above. Findings are matched against the baseline
+(``tools/lint_baseline.json``) by ``(rule, path, key)`` where ``key`` is
+the stripped source line (or the symbol name, for R4) — line-number-free,
+so baselines survive unrelated edits and diff cleanly.
+
+The module is dependency-free (stdlib ``ast``/``tokenize`` only): the
+linter itself can never drag jax into a CI job that only wants to lint.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import json
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+RULES = {
+    "R1": "recompile hazard (jit outside JitCache / jit in loop / "
+          "python scalar into jitted entry)",
+    "R2": "host sync reachable from traced code",
+    "R3": "donated buffer read after donation",
+    "R4": "dead public API (kernel/registry orphan)",
+    "R5": "bare assert in library code",
+}
+
+# Callables whose function-valued arguments are traced by JAX.
+_TRACED_CALLS = {
+    "jax.jit", "jax.vmap", "jax.pmap", "jax.grad", "jax.value_and_grad",
+    "jax.checkpoint", "jax.remat", "jax.lax.scan", "jax.lax.map",
+    "jax.lax.while_loop", "jax.lax.cond", "jax.lax.fori_loop",
+    "jax.lax.switch", "jax.lax.associative_scan",
+}
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*disable=((?:R\d+|all)(?:\s*,\s*(?:R\d+|all))*)")
+
+
+@dataclass
+class Finding:
+    rule: str
+    path: str          # posix path relative to the scan root's repo
+    line: int
+    message: str
+    key: str           # line-number-free baseline key
+    baselined: bool = False
+
+    def sort_key(self):
+        return (self.path, self.line, self.rule, self.key)
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message, "key": self.key,
+                "baselined": self.baselined}
+
+
+def baseline_key(f: Finding) -> Tuple[str, str, str]:
+    return (f.rule, f.path, f.key)
+
+
+# ---------------------------------------------------------------------------
+# Per-module model
+# ---------------------------------------------------------------------------
+
+class _Module:
+    def __init__(self, relpath: str, source: str):
+        self.relpath = relpath.replace("\\", "/")
+        self.source = source
+        self.tree = ast.parse(source)
+        self.lines = source.splitlines()
+        self.imports = self._imports(self.tree)
+        self.suppress = self._suppressions(source)
+        # dotted module path for cross-module resolution:
+        # "src/repro/core/fedavg.py" -> "repro.core.fedavg"
+        p = self.relpath[:-3] if self.relpath.endswith(".py") else self.relpath
+        parts = p.split("/")
+        if "repro" in parts:
+            parts = parts[parts.index("repro"):]
+        self.modpath = ".".join(parts)
+        if self.modpath.endswith(".__init__"):
+            self.modpath = self.modpath[:-len(".__init__")]
+
+    @staticmethod
+    def _imports(tree) -> Dict[str, str]:
+        out: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    out[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and node.level == 0:
+                for a in node.names:
+                    out[a.asname or a.name] = f"{node.module}.{a.name}"
+        return out
+
+    @staticmethod
+    def _suppressions(source: str) -> Dict[int, Set[str]]:
+        out: Dict[int, Set[str]] = {}
+        try:
+            toks = tokenize.generate_tokens(io.StringIO(source).readline)
+            for tok in toks:
+                if tok.type != tokenize.COMMENT:
+                    continue
+                m = _SUPPRESS_RE.search(tok.string)
+                if m:
+                    out[tok.start[0]] = {r.strip() for r in
+                                         m.group(1).split(",") if r.strip()}
+        except tokenize.TokenError:
+            pass
+        return out
+
+    def resolve(self, node) -> Optional[str]:
+        """Dotted path of a Name/Attribute chain via the import map."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        base = self.imports.get(node.id)
+        if base is None:
+            return None
+        return ".".join([base] + parts[::-1])
+
+    def suppressed(self, line: int, rule: str) -> bool:
+        for ln in (line, line - 1):
+            rs = self.suppress.get(ln)
+            if not rs or not (rule in rs or "all" in rs):
+                continue
+            if ln == line:
+                return True
+            # the preceding line counts only if it is a pure comment line
+            if 1 <= ln <= len(self.lines) \
+                    and self.lines[ln - 1].lstrip().startswith("#"):
+                return True
+        return False
+
+    def key_for(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return " ".join(self.lines[line - 1].split())
+        return ""
+
+
+def _jit_target(call: ast.Call, mod: _Module):
+    """If ``call`` is ``jax.jit(...)`` or ``functools.partial(jax.jit,
+    ...)``, return the wrapped-function node (or None); else ``False``."""
+    r = mod.resolve(call.func)
+    if r == "jax.jit":
+        return call.args[0] if call.args else None
+    if r == "functools.partial" and call.args \
+            and mod.resolve(call.args[0]) == "jax.jit":
+        return call.args[1] if len(call.args) > 1 else None
+    return False
+
+
+def _static_names(call: ast.Call) -> Set[str]:
+    """static_argnames declared on a jit call (string constants only)."""
+    out: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            vals = kw.value.elts if isinstance(
+                kw.value, (ast.Tuple, ast.List)) else [kw.value]
+            for v in vals:
+                if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                    out.add(v.value)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Function index + call graph (R2)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Func:
+    uid: str
+    node: object                      # FunctionDef / AsyncFunctionDef / Lambda
+    mod: _Module
+    name: str
+    class_name: Optional[str]
+    params: List[str] = field(default_factory=list)
+    static: Set[str] = field(default_factory=set)
+    nested: Dict[str, "_Func"] = field(default_factory=dict)
+
+
+class _Index:
+    """Project-wide function/lambda index with name-resolution helpers."""
+
+    def __init__(self, modules: Sequence[_Module]):
+        self.modules = modules
+        self.funcs: Dict[str, _Func] = {}          # uid -> _Func
+        self.by_node: Dict[int, _Func] = {}        # id(ast node) -> _Func
+        self.top: Dict[Tuple[str, str], _Func] = {}       # (modpath, name)
+        self.methods: Dict[Tuple[str, str, str], _Func] = {}
+        for mod in modules:
+            self._index_module(mod)
+
+    def _index_module(self, mod: _Module):
+        def visit(node, class_name, parent: Optional[_Func]):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.ClassDef):
+                    visit(child, child.name, None)
+                elif isinstance(child, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                    f = self._add(child, mod, child.name, class_name)
+                    if parent is not None:
+                        parent.nested[child.name] = f
+                    elif class_name is not None:
+                        self.methods[(mod.modpath, class_name,
+                                      child.name)] = f
+                    else:
+                        self.top[(mod.modpath, child.name)] = f
+                    visit(child, None, f)
+                else:
+                    # lambdas anywhere (call args, assignments, ...)
+                    for sub in ast.walk(child):
+                        if isinstance(sub, ast.Lambda):
+                            self._add(sub, mod, "<lambda>", class_name)
+                    visit(child, class_name, parent)
+        visit(mod.tree, None, None)
+
+    def _add(self, node, mod: _Module, name: str,
+             class_name: Optional[str]) -> _Func:
+        if id(node) in self.by_node:
+            return self.by_node[id(node)]
+        uid = f"{mod.relpath}:{name}:{node.lineno}"
+        a = node.args
+        params = [p.arg for p in
+                  list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)]
+        if a.vararg:
+            params.append(a.vararg.arg)
+        f = _Func(uid, node, mod, name, class_name, params)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call) \
+                        and _jit_target(dec, mod) is not False:
+                    f.static |= _static_names(dec)
+        self.funcs[uid] = f
+        self.by_node[id(node)] = f
+        return f
+
+    def resolve_callee(self, expr, mod: _Module,
+                       scope: Optional[_Func]) -> Optional[_Func]:
+        """Best-effort: map a callee/argument expression to an indexed
+        function (nested def, module-level def, method via self, or an
+        imported project function)."""
+        if isinstance(expr, ast.Lambda):
+            return self.by_node.get(id(expr))
+        if isinstance(expr, ast.Call):            # functools.partial(f, ...)
+            if mod.resolve(expr.func) == "functools.partial" and expr.args:
+                return self.resolve_callee(expr.args[0], mod, scope)
+            return None
+        if isinstance(expr, ast.Name):
+            cur = scope
+            while cur is not None:
+                if expr.id in cur.nested:
+                    return cur.nested[expr.id]
+                cur = None                        # one level is enough here
+            hit = self.top.get((mod.modpath, expr.id))
+            if hit is not None:
+                return hit
+            dotted = mod.imports.get(expr.id)
+            if dotted:
+                return self._by_dotted(dotted)
+            return None
+        if isinstance(expr, ast.Attribute):
+            if isinstance(expr.value, ast.Name) and expr.value.id == "self" \
+                    and scope is not None and scope.class_name:
+                return self.methods.get((mod.modpath, scope.class_name,
+                                         expr.attr))
+            dotted = mod.resolve(expr)
+            if dotted:
+                return self._by_dotted(dotted)
+        return None
+
+    def _by_dotted(self, dotted: str) -> Optional[_Func]:
+        if "." not in dotted:
+            return None
+        modpath, name = dotted.rsplit(".", 1)
+        return self.top.get((modpath, name))
+
+
+def _body_nodes(func: _Func):
+    """AST nodes of a function body, not descending into nested function
+    definitions or lambdas (those are separate indexed functions)."""
+    node = func.node
+    roots = node.body if isinstance(node.body, list) else [node.body]
+    stack = list(roots)
+    while stack:
+        n = stack.pop()
+        yield n
+        for child in ast.iter_child_nodes(n):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                continue
+            stack.append(child)
+
+
+# ---------------------------------------------------------------------------
+# Rule implementations
+# ---------------------------------------------------------------------------
+
+def _scalar_shaped(expr, mod: _Module) -> bool:
+    """Does ``expr`` itself evaluate to a Python scalar derived from
+    shapes/lengths (the classic per-value-retrace argument)?  Top-level
+    structure only — a ``len()`` buried inside another call's arguments
+    produces whatever that call returns, not a scalar."""
+    if isinstance(expr, ast.Call) and isinstance(expr.func, ast.Name) \
+            and expr.func.id in ("len", "int") \
+            and expr.func.id not in mod.imports:
+        return True
+    if isinstance(expr, ast.Attribute) and expr.attr in ("shape", "size",
+                                                         "ndim"):
+        return True
+    if isinstance(expr, ast.Subscript):
+        return _scalar_shaped(expr.value, mod)
+    if isinstance(expr, ast.BinOp):
+        return (_scalar_shaped(expr.left, mod)
+                or _scalar_shaped(expr.right, mod))
+    if isinstance(expr, ast.UnaryOp):
+        return _scalar_shaped(expr.operand, mod)
+    return False
+
+
+def _rule_r1(mod: _Module, findings: List[Finding]):
+    if mod.relpath.endswith("core/compile_cache.py"):
+        return                                   # the cache implementation
+    jitted_names: Set[str] = set()
+    loop_stack: List[object] = []
+
+    def visit(node):
+        is_loop = isinstance(node, (ast.For, ast.While))
+        if is_loop:
+            loop_stack.append(node)
+        if isinstance(node, ast.Call) and _jit_target(node, mod) is not False:
+            if loop_stack:
+                msg = ("jax.jit inside a loop body builds a fresh wrapper "
+                       "(and retraces) every pass; hoist it, or route it "
+                       "through core.compile_cache.JitCache")
+            else:
+                msg = ("direct jax.jit bypasses core.compile_cache.JitCache"
+                       " — compiles are uncounted and unbounded; route "
+                       "through a JitCache (or suppress with justification)")
+            findings.append(Finding("R1", mod.relpath, node.lineno, msg,
+                                    mod.key_for(node.lineno)))
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                target = dec if isinstance(dec, ast.Call) else None
+                if (mod.resolve(dec) == "jax.jit") or (
+                        target is not None
+                        and _jit_target(target, mod) is not False):
+                    line = dec.lineno
+                    findings.append(Finding(
+                        "R1", mod.relpath, line,
+                        "direct @jax.jit bypasses core.compile_cache."
+                        "JitCache — compiles are uncounted and unbounded; "
+                        "route through a JitCache (or suppress with "
+                        "justification)", mod.key_for(line)))
+                    jitted_names.add(node.name)
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call) \
+                and _jit_target(node.value, mod) is not False:
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    jitted_names.add(t.id)
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+        if is_loop:
+            loop_stack.pop()
+
+    visit(mod.tree)
+
+    # python scalars flowing into locally-jitted entry points
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id in jitted_names):
+            continue
+        for arg in node.args:
+            if _scalar_shaped(arg, mod):
+                findings.append(Finding(
+                    "R1", mod.relpath, node.lineno,
+                    f"python scalar argument to jitted "
+                    f"'{node.func.id}' — every distinct value retraces; "
+                    "fold it into a declared static bucket/compile key or "
+                    "pass a traced array (jnp.asarray)",
+                    mod.key_for(node.lineno)))
+                break
+
+
+def _rule_r5(mod: _Module, findings: List[Finding]):
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assert):
+            findings.append(Finding(
+                "R5", mod.relpath, node.lineno,
+                "bare assert in library code vanishes under python -O "
+                "(the serving._admit bug class); raise ValueError/"
+                "RuntimeError instead", mod.key_for(node.lineno)))
+
+
+def _donated_names(stmt, mod: _Module) -> List[Tuple[str, int]]:
+    """(name, line) pairs donated by calls inside ``stmt``."""
+    out: List[Tuple[str, int]] = []
+    for call in (n for n in ast.walk(stmt) if isinstance(n, ast.Call)):
+        # JitCache-style: pool.call(name, fn, (donated...), (args...))
+        if isinstance(call.func, ast.Attribute) and call.func.attr == "call" \
+                and len(call.args) >= 4 \
+                and isinstance(call.args[2], ast.Tuple) \
+                and isinstance(call.args[3], ast.Tuple):
+            idxs = [c.value for c in call.args[2].elts
+                    if isinstance(c, ast.Constant)
+                    and isinstance(c.value, int)]
+            elts = call.args[3].elts
+            for i in idxs:
+                if i < len(elts) and isinstance(elts[i], ast.Name):
+                    out.append((elts[i].id, call.lineno))
+        # immediately-invoked jax.jit(f, donate_argnums=...)(args...)
+        if isinstance(call.func, ast.Call) \
+                and _jit_target(call.func, mod) is not False:
+            for kw in call.func.keywords:
+                if kw.arg not in ("donate_argnums", "donate_argnames"):
+                    continue
+                vals = kw.value.elts if isinstance(
+                    kw.value, (ast.Tuple, ast.List)) else [kw.value]
+                idxs = [v.value for v in vals
+                        if isinstance(v, ast.Constant)
+                        and isinstance(v.value, int)]
+                for i in idxs:
+                    if i < len(call.args) \
+                            and isinstance(call.args[i], ast.Name):
+                        out.append((call.args[i].id, call.lineno))
+        # engine keywords: donate=True donates the stack (2nd positional),
+        # donate_params=True the params (1st positional).  Builders named
+        # ``jit_*`` (launch.steps) take the same keywords but configure
+        # donation for the function they RETURN — their own args are safe.
+        term = call.func.attr if isinstance(call.func, ast.Attribute) \
+            else call.func.id if isinstance(call.func, ast.Name) else ""
+        if term.startswith("jit_"):
+            continue
+        for kw in call.keywords:
+            if not (isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True):
+                continue
+            pos = {"donate": 1, "donate_params": 0}.get(kw.arg)
+            if pos is not None and pos < len(call.args) \
+                    and isinstance(call.args[pos], ast.Name):
+                out.append((call.args[pos].id, call.lineno))
+    return out
+
+
+def _assigned_names(stmt) -> Set[str]:
+    out: Set[str] = set()
+    for n in ast.walk(stmt):
+        if isinstance(n, ast.Name) and isinstance(n.ctx,
+                                                  (ast.Store, ast.Del)):
+            out.add(n.id)
+    return out
+
+
+def _rule_r3(mod: _Module, findings: List[Finding]):
+    def check_body(body: List):
+        live: Dict[str, int] = {}            # donated name -> donation line
+        for stmt in body:
+            if live:
+                reads = [n for n in ast.walk(stmt)
+                         if isinstance(n, ast.Name)
+                         and isinstance(n.ctx, ast.Load) and n.id in live]
+                for n in reads:
+                    if n.id not in live:     # already reported this stmt
+                        continue
+                    findings.append(Finding(
+                        "R3", mod.relpath, n.lineno,
+                        f"'{n.id}' was donated to XLA at line "
+                        f"{live[n.id]} and is read afterwards — its "
+                        "buffer may already be reused; copy before "
+                        "donating or drop the donation",
+                        mod.key_for(n.lineno)))
+                    live.pop(n.id, None)
+            donated = _donated_names(stmt, mod)
+            assigned = _assigned_names(stmt)
+            for name, line in donated:
+                if name not in assigned:     # rebinding clears the hazard
+                    live[name] = line
+            for name in assigned:
+                live.pop(name, None)
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            check_body(node.body)
+    check_body(mod.tree.body)
+
+
+def _rule_r2(modules: Sequence[_Module], index: _Index,
+             findings: List[Finding]):
+    roots: Dict[str, str] = {}               # uid -> why it is traced
+
+    def mark(expr, mod, scope, why):
+        f = index.resolve_callee(expr, mod, scope)
+        if f is not None and f.uid not in roots:
+            roots[f.uid] = why
+
+    # decorated roots
+    for f in index.funcs.values():
+        node = f.node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if mod_resolves_jit(dec, f.mod):
+                    roots.setdefault(f.uid, "@jax.jit")
+
+    # functions handed to tracers — walk each indexed function's own body
+    # so the enclosing scope is known (self.X / nested-def resolution)
+    def scan_calls(owner: Optional[_Func], nodes, mod: _Module):
+        for n in nodes:
+            if not isinstance(n, ast.Call):
+                continue
+            r = mod.resolve(n.func)
+            traced = r in _TRACED_CALLS or (r or "").endswith(".shard_map")
+            if not traced and isinstance(n, ast.Call):
+                t = _jit_target(n, mod)
+                if t is not False and t is not None:
+                    mark(t, mod, owner, "jax.jit")
+                    continue
+            if traced:
+                for arg in list(n.args) + [kw.value for kw in n.keywords]:
+                    mark(arg, mod, owner, r or "shard_map")
+
+    for f in index.funcs.values():
+        scan_calls(f, _body_nodes(f), f.mod)
+    for mod in modules:
+        top_nodes = []
+        for stmt in mod.tree.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            top_nodes.extend(ast.walk(stmt))
+        scan_calls(None, top_nodes, mod)
+
+    # reachability over intra-project call edges
+    reach: Dict[str, str] = dict(roots)
+    frontier = list(roots)
+    while frontier:
+        uid = frontier.pop()
+        f = index.funcs[uid]
+        for n in _body_nodes(f):
+            if not isinstance(n, ast.Call):
+                continue
+            callee = index.resolve_callee(n.func, f.mod, f)
+            if callee is not None and callee.uid not in reach:
+                reach[callee.uid] = reach[uid]
+                frontier.append(callee.uid)
+
+    # host syncs inside reachable functions
+    for uid, why in sorted(reach.items()):
+        f = index.funcs[uid]
+        mod = f.mod
+        for n in _body_nodes(f):
+            sync = None
+            if isinstance(n, ast.Call):
+                if isinstance(n.func, ast.Attribute) and n.func.attr == \
+                        "item":
+                    sync = ".item()"
+                elif isinstance(n.func, ast.Name) \
+                        and n.func.id in ("int", "float", "bool") \
+                        and n.func.id not in mod.imports and n.args \
+                        and not isinstance(n.args[0], ast.Constant) \
+                        and not _scalar_shaped(n.args[0], mod):
+                    sync = f"{n.func.id}()"
+                else:
+                    r = mod.resolve(n.func)
+                    if r in ("numpy.asarray", "numpy.array",
+                             "jax.device_get"):
+                        sync = r
+            if sync:
+                findings.append(Finding(
+                    "R2", mod.relpath, n.lineno,
+                    f"host sync {sync} inside code reachable from traced "
+                    f"context ({why}) forces a device round-trip per trace"
+                    " — hoist it out of the compiled body",
+                    mod.key_for(n.lineno)))
+
+    # `if` on traced (non-static) parameters of direct roots
+    for uid in sorted(roots):
+        f = index.funcs[uid]
+        traced_params = {p for p in f.params
+                         if p not in f.static and p not in ("self", "cls")}
+        if not traced_params:
+            continue
+        for n in _body_nodes(f):
+            if not isinstance(n, ast.If):
+                continue
+            hits = [x.id for x in ast.walk(n.test)
+                    if isinstance(x, ast.Name) and x.id in traced_params]
+            # exclude names only used as attribute bases (static config
+            # branching like `cfg.sliding_window`)
+            bases = {x.value.id for x in ast.walk(n.test)
+                     if isinstance(x, ast.Attribute)
+                     and isinstance(x.value, ast.Name)}
+            hits = [h for h in hits if h not in bases]
+            if hits:
+                findings.append(Finding(
+                    "R2", f.mod.relpath, n.lineno,
+                    f"`if` on traced value '{hits[0]}' inside a traced "
+                    f"function ({roots[uid]}) — python control flow on "
+                    "tracers fails or forces a sync; use jnp.where / "
+                    "lax.cond, or declare the argument static",
+                    f.mod.key_for(n.lineno)))
+
+
+def mod_resolves_jit(dec, mod: _Module) -> bool:
+    if mod.resolve(dec) == "jax.jit":
+        return True
+    return isinstance(dec, ast.Call) and _jit_target(dec, mod) is not False
+
+
+def _rule_r4(modules: Sequence[_Module], findings: List[Finding]):
+    api_mods = [m for m in modules
+                if ("/kernels/" in m.relpath
+                    and not m.relpath.endswith("__init__.py"))
+                or m.relpath.endswith("models/registry.py")]
+    if not api_mods:
+        return
+    refs: Dict[str, Set[str]] = {}           # identifier -> modules using it
+    for m in modules:
+        for n in ast.walk(m.tree):
+            name = None
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load):
+                name = n.id
+            elif isinstance(n, ast.Attribute):
+                name = n.attr
+            if name:
+                refs.setdefault(name, set()).add(m.relpath)
+    for m in api_mods:
+        for stmt in m.tree.body:
+            if not isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if stmt.name.startswith("_"):
+                continue
+            users = refs.get(stmt.name, set()) - {m.relpath}
+            if not users:
+                stem = m.relpath.rsplit("/", 1)[-1][:-3]
+                findings.append(Finding(
+                    "R4", m.relpath, stmt.lineno,
+                    f"public '{stem}.{stmt.name}' is referenced by no other"
+                    " library module (comments/docstrings/tests only) — "
+                    "wire it into the hot path or track it as an open "
+                    "item", key=f"{stem}.{stmt.name}"))
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def scan_sources(sources: Dict[str, str]) -> List[Finding]:
+    """Lint a mapping of ``relpath -> source``. Cross-module rules (R2 call
+    graph, R4 references) see exactly the modules passed in."""
+    modules = []
+    for relpath, src in sorted(sources.items()):
+        try:
+            modules.append(_Module(relpath, src))
+        except SyntaxError as e:
+            raise ValueError(f"{relpath}: cannot parse: {e}") from e
+    findings: List[Finding] = []
+    for mod in modules:
+        _rule_r1(mod, findings)
+        _rule_r3(mod, findings)
+        _rule_r5(mod, findings)
+    index = _Index(modules)
+    _rule_r2(modules, index, findings)
+    _rule_r4(modules, findings)
+    by_mod = {m.relpath: m for m in modules}
+    kept = [f for f in findings
+            if not by_mod[f.path].suppressed(f.line, f.rule)]
+    # identical (rule, line, key) duplicates add noise, not information
+    seen: Set[Tuple] = set()
+    out = []
+    for f in sorted(kept, key=Finding.sort_key):
+        k = (f.rule, f.path, f.line, f.key)
+        if k not in seen:
+            seen.add(k)
+            out.append(f)
+    return out
+
+
+def scan_paths(root, paths: Optional[Iterable] = None) -> List[Finding]:
+    """Lint ``.py`` files under ``root`` (default scope: ``src/repro``).
+
+    ``root`` is the repo root; findings carry repo-relative posix paths.
+    """
+    root = Path(root)
+    targets = [Path(p) for p in paths] if paths else [root / "src" / "repro"]
+    sources: Dict[str, str] = {}
+    for t in targets:
+        t = t if t.is_absolute() else root / t
+        files = sorted(t.rglob("*.py")) if t.is_dir() else [t]
+        for fp in files:
+            rel = fp.relative_to(root).as_posix()
+            sources[rel] = fp.read_text()
+    return scan_sources(sources)
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+def load_baseline(path) -> Set[Tuple[str, str, str]]:
+    p = Path(path)
+    if not p.exists():
+        return set()
+    data = json.loads(p.read_text())
+    return {(e["rule"], e["path"], e["key"]) for e in data.get("findings",
+                                                              [])}
+
+
+def make_baseline(findings: Sequence[Finding]) -> str:
+    """Deterministic baseline JSON: sorted, deduped, repo-relative paths."""
+    entries = sorted({baseline_key(f) for f in findings})
+    payload = {
+        "comment": "repro-lint baseline: pre-existing findings tracked but "
+                   "not blocking. Regenerate with "
+                   "`python tools/repro_lint.py --fix-baseline`.",
+        "findings": [{"rule": r, "path": p, "key": k}
+                     for (r, p, k) in entries],
+    }
+    return json.dumps(payload, indent=2, sort_keys=True) + "\n"
+
+
+def mark_baselined(findings: Sequence[Finding],
+                   baseline: Set[Tuple[str, str, str]]) -> List[Finding]:
+    """Mark findings present in the baseline; return the NEW ones."""
+    new = []
+    for f in findings:
+        f.baselined = baseline_key(f) in baseline
+        if not f.baselined:
+            new.append(f)
+    return new

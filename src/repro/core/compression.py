@@ -26,7 +26,8 @@ class QuantizedUpdate(NamedTuple):
 
 def quantize_delta(w_new, anchor, bits: int = 8) -> QuantizedUpdate:
     """Symmetric per-leaf quantization of (w_new - anchor)."""
-    assert bits == 8, "int8 wire format"
+    if bits != 8:
+        raise ValueError(f"int8 wire format only (bits={bits})")
 
     def q_leaf(a, b):
         d = (a.astype(jnp.float32) - b.astype(jnp.float32))

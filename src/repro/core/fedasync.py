@@ -26,9 +26,15 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.compile_cache import JitCache
 from repro.models import registry
 from repro.optim import apply_mask, proximal_grad, sgd, trainable_mask
 from repro.types import FedConfig, ModelConfig
+
+# Every server mix in the process shares one counted jit pool: the mixing
+# programs are config-independent, and JitCache.num_compiled makes the
+# "one program per group size" claim observable (and guard-rail testable).
+_JITS = JitCache()
 
 
 def staleness_fn(a: float) -> Callable:
@@ -49,16 +55,19 @@ class ServerState:
     total_updates: int = 0
 
 
-@jax.jit
-def _mix(params, w_new, beta_t):
+def _mix_impl(params, w_new, beta_t):
     return jax.tree_util.tree_map(
         lambda a, b: ((1.0 - beta_t) * a.astype(jnp.float32)
                       + beta_t * b.astype(jnp.float32)).astype(a.dtype),
         params, w_new)
 
 
-@jax.jit
-def _mix_many(params, betas, *w_news):
+def _mix(params, w_new, beta_t):
+    """One receive applied: dispatches through the shared ``JitCache``."""
+    return _JITS.call("mix", _mix_impl, (), (params, w_new, beta_t))
+
+
+def _mix_many_impl(params, betas, *w_news):
     """Fused sequential mix: m receives applied in order as ONE program.
 
     ``w_news`` are the m client models (separate pytrees — stacked to a
@@ -82,6 +91,13 @@ def _mix_many(params, betas, *w_news):
 
     out, _ = jax.lax.scan(body, params, (w_stack, betas))
     return out
+
+
+def _mix_many(params, betas, *w_news):
+    """Fused group mix via the shared ``JitCache`` ("mix_many" entry; one
+    traced program per group size m, counted by ``num_compiled``)."""
+    return _JITS.call("mix_many", _mix_many_impl,
+                      (), (params, betas) + tuple(w_news))
 
 
 def make_server_update(fed: FedConfig):
@@ -187,6 +203,10 @@ def make_client_step(cfg: ModelConfig, fed: FedConfig, loss_kwargs=None):
     def task_loss(params, batch):
         return registry.loss_fn(params, cfg, batch, **loss_kwargs)[0]
 
+    # Reference oracle step: make_client_step is memoized per (cfg, fed)
+    # upstream, so this jit is created once per config and its identity is
+    # part of the parity-test contract.
+    # repro-lint: disable=R1
     @jax.jit
     def step(params, opt_state, anchor, batch, mask):
         loss, grads = jax.value_and_grad(task_loss)(params, batch)

@@ -27,21 +27,30 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import fed_engine
+from repro.core import compile_cache, fed_engine
 from repro.core.fedasync import cached_client_step, make_client_step
 from repro.data.synthetic import stack_batches
 from repro.optim import trainable_mask
 from repro.types import FedConfig, ModelConfig
 
 
-@jax.jit
-def weighted_average(param_trees: Sequence, weights: jax.Array):
-    """weights normalized data sizes, shape (n_clients,)."""
+# Aggregation shares one counted jit pool: one traced program per client
+# count (the pytree arity is the compile key), observable via num_compiled.
+_JITS = compile_cache.JitCache()
+
+
+def _weighted_average_impl(param_trees, weights):
     def avg(*leaves):
         stacked = jnp.stack([l.astype(jnp.float32) for l in leaves])
         w = weights.reshape((-1,) + (1,) * (stacked.ndim - 1))
         return jnp.sum(stacked * w, axis=0).astype(leaves[0].dtype)
     return jax.tree_util.tree_map(avg, *param_trees)
+
+
+def weighted_average(param_trees: Sequence, weights: jax.Array):
+    """weights normalized data sizes, shape (n_clients,)."""
+    return _JITS.call("weighted_average", _weighted_average_impl,
+                      (), (list(param_trees), weights))
 
 
 def _client_weights(n: int, data_sizes: Sequence[int] | None):

@@ -278,7 +278,10 @@ class ContinuousBatcher:
         logits, gcache = self._jits.call(
             "prefill", self._prefill_fn, (),
             (self.params, jnp.asarray(tokens), jnp.asarray(lengths)))
-        self._install(gcache, items, logits[:m], lengths[:m])
+        # full-shape logits: _install reads rows [0, m) on host after the
+        # argmax transfer, so eagerly slicing [:m] here would only add a
+        # device dispatch per admit group
+        self._install(gcache, items, logits, lengths[:m])
         self.group_admits[m] = self.group_admits.get(m, 0) + 1
         self.bucket_hist[bucket] = self.bucket_hist.get(bucket, 0) + 1
 
@@ -303,7 +306,8 @@ class ContinuousBatcher:
             "install", install, (0,),
             (self.cache, gcache, jnp.asarray(slots),
              jnp.asarray(lengths, jnp.int32)))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        # argmax on device, one explicit transfer of B ints to host
+        nxt = jax.device_get(jnp.argmax(logits, axis=-1)).astype(np.int32)
         for j, (slot, req) in enumerate(items):
             req.slot = slot
             req.out.append(int(nxt[j]))
@@ -368,7 +372,11 @@ class ContinuousBatcher:
             name, fn, (2,),
             (self.params, jnp.asarray(self.last_tok), self.cache,
              jnp.asarray(self.pos)))
-        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
+        # argmax on device, one explicit transfer of B ints per step; the
+        # length-1 step axis is squeezed on host (an eager [:, 0, :] would
+        # cost an extra device dispatch per decode step)
+        nxt = jax.device_get(
+            jnp.argmax(logits, axis=-1)).astype(np.int32)[:, 0]
         for slot, req in enumerate(self.active):
             if req is None:
                 continue

@@ -191,8 +191,12 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
     its next model; ``eval_fn`` granularity also coarsens to group
     boundaries. ``window=0`` (default) is the exact event-by-event loop.
     """
-    assert len(fleet) == len(client_data) == fed.num_clients
-    assert engine in ("scan", "loop"), engine
+    if not (len(fleet) == len(client_data) == fed.num_clients):
+        raise ValueError(
+            f"fleet ({len(fleet)}), client_data ({len(client_data)}) and "
+            f"fed.num_clients ({fed.num_clients}) must agree")
+    if engine not in ("scan", "loop"):
+        raise ValueError(f"engine must be 'scan' or 'loop', got {engine!r}")
     rng = np.random.default_rng(fed.seed)
     if engine == "scan":
         run = fed_engine.make_client_run(cfg, fed)
@@ -238,7 +242,7 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
                     w_news, loss_arr = run.run_batch(
                         server.params, padded, iters, mask=mask,
                         donate=True)
-                    la = np.asarray(loss_arr)    # single host sync
+                    la = jax.device_get(loss_arr)    # single host sync
                     per_client = run.unstack(
                         w_news, len(live))       # one dispatch, not n×leaves
                     for j, k in enumerate(live):
@@ -252,7 +256,9 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
                 else:
                     w_new, loss_arr = run(server.params, stacks[k],
                                           mask=mask, donate=True)
-                    results[k] = (w_new, [float(loss_arr[-1])])
+                    # one explicit transfer; indexing happens on host
+                    results[k] = (w_new,
+                                  [float(jax.device_get(loss_arr)[-1])])
         else:
             for k in ks:
                 w_new, _, losses = fedasync.client_update(
@@ -331,8 +337,13 @@ def run_sync(params0, cfg: ModelConfig, fed: FedConfig,
     front and never donated), so an ``eval_fn`` must evaluate the params
     it is handed immediately, not stash them for later.
     """
-    assert len(fleet) == len(client_data) == fed.num_clients
-    assert engine in ("scan", "loop", "shard"), engine
+    if not (len(fleet) == len(client_data) == fed.num_clients):
+        raise ValueError(
+            f"fleet ({len(fleet)}), client_data ({len(client_data)}) and "
+            f"fed.num_clients ({fed.num_clients}) must agree")
+    if engine not in ("scan", "loop", "shard"):
+        raise ValueError(
+            f"engine must be 'scan', 'loop' or 'shard', got {engine!r}")
     rng = np.random.default_rng(fed.seed)
     if engine == "scan":
         round_engine = fed_engine.make_sync_round(cfg, fed)

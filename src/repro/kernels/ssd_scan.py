@@ -75,7 +75,8 @@ def ssd_scan_pallas(x, dt, A, Bm, Cm, chunk: int, interpret: bool = True):
     B, S, H, P = x.shape
     N = Bm.shape[-1]
     Q = min(chunk, S)
-    assert S % Q == 0, (S, Q)
+    if S % Q != 0:
+        raise ValueError(f"seq len {S} not divisible by chunk {Q}")
     nc = S // Q
     BH = B * H
 

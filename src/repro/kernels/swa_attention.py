@@ -89,7 +89,9 @@ def swa_attention_pallas(q, k, v, window: int, causal: bool = True,
     BH, S, D = q.shape
     qb = min(q_block, S)
     kb = min(k_block, S)
-    assert S % qb == 0 and S % kb == 0, (S, qb, kb)
+    if S % qb != 0 or S % kb != 0:
+        raise ValueError(
+            f"seq len {S} not divisible by blocks (qb={qb}, kb={kb})")
     nk_max = S // kb
     nkv_grid = min(nk_max, (window + qb - 1) // kb + 1 + (0 if causal else
                                                           (window - 1) // kb + 1))

@@ -72,7 +72,9 @@ def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     if Sq <= q_chunk:
         out = attend(qg, q_offset + jnp.arange(Sq))
     else:
-        assert Sq % q_chunk == 0, (Sq, q_chunk)
+        if Sq % q_chunk != 0:
+            raise ValueError(
+                f"seq len {Sq} not divisible by q_chunk {q_chunk}")
         n = Sq // q_chunk
         qs = qg.reshape(B, n, q_chunk, KV, G, D).transpose(1, 0, 2, 3, 4, 5)
         offs = q_offset + jnp.arange(n) * q_chunk

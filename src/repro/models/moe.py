@@ -49,6 +49,9 @@ def init_moe_params(key, d_model: int, d_ff: int, moe: MoEConfig,
 
 
 def capacity(num_tokens: int, moe: MoEConfig) -> int:
+    # pure python shape math on the (static) token count: C is a compile-
+    # time constant inside the traced dispatch, not a device sync.
+    # repro-lint: disable=R2
     return int(math.ceil(num_tokens / moe.num_experts
                          * moe.capacity_factor * moe.top_k))
 

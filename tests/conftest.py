@@ -14,6 +14,58 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture
+def guard_rails():
+    """Opt-in runtime guard rails as a context-manager factory.
+
+    Inside ``with guard_rails():`` every *implicit* host->device transfer
+    (numpy/python leaves silently hitting a jitted boundary) raises, and
+    ``jax.checking_leaks`` catches tracer leaks. Explicit transfers —
+    ``jax.device_put``, ``jax.device_get``, ``jnp.asarray`` — stay legal,
+    so tests wrap their steady-state region only, after device_put-ing
+    their inputs; warm-up/setup stays outside the ``with``.
+    """
+    import contextlib
+
+    import jax
+
+    @contextlib.contextmanager
+    def rails():
+        with jax.transfer_guard("disallow"), jax.checking_leaks():
+            yield
+
+    return rails
+
+
+@pytest.fixture
+def compile_budget():
+    """Context-manager factory pinning a ``JitCache`` compile delta.
+
+    ``with compile_budget(cache, n):`` asserts that at most ``n`` new
+    programs were compiled inside the block — the executable form of the
+    PR-2 "one program per round shape" and PR-5 "<= bucket ladder"
+    claims. ``exact=True`` pins the delta exactly.
+    """
+    import contextlib
+
+    @contextlib.contextmanager
+    def budget(cache, n, exact=False):
+        before = cache.num_compiled
+        yield
+        delta = cache.num_compiled - before
+        if exact:
+            if delta != n:
+                raise AssertionError(
+                    f"compile budget: expected exactly {n} new "
+                    f"programs, got {delta}")
+        elif delta > n:
+            raise AssertionError(
+                f"compile budget exceeded: {delta} new programs "
+                f"(budget {n})")
+
+    return budget
+
+
 @pytest.fixture(scope="session")
 def smoke_shape():
     from repro.types import ShapeConfig

@@ -1,0 +1,92 @@
+"""Runtime guard rails: the PR-2 and PR-5 compile/transfer claims as
+executable invariants.
+
+``guard_rails()`` makes every *implicit* host->device transfer an error
+(and checks for tracer leaks); ``compile_budget(cache, n)`` pins the
+``JitCache`` compile delta. Together they assert the steady state of the
+two compiled hot paths: the padded fed round re-runs new H^k draws with
+zero new programs and zero hidden transfers, and the serving ladder
+replays a whole stream without compiling or syncing implicitly.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import fed_engine
+from repro.core.serving import ContinuousBatcher
+from repro.data import SyntheticLMDataset, stack_batches
+from repro.models import registry
+from repro.types import FedConfig, ModelConfig
+
+pytestmark = pytest.mark.guard_rails
+
+TINY = ModelConfig(name="guard-test-tiny", family="dense", num_layers=1,
+                   d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                   vocab_size=64)
+
+
+def test_padded_round_one_compile_no_implicit_transfers(guard_rails,
+                                                        compile_budget):
+    """PR-2 invariant: H^k is traced, not a compile key — after one
+    warm-up, new H vectors run with ZERO new programs and zero implicit
+    host->device transfers (all inputs are device_put up front)."""
+    fed = FedConfig(num_clients=3, global_epochs=2, local_iters_min=1,
+                    local_iters_max=3, lr=0.01)
+    ds = SyntheticLMDataset(vocab=TINY.vocab_size, seq_len=8, seed=0)
+    params = registry.init_params(jax.random.PRNGKey(0), TINY)
+    run = fed_engine.ClientRun(TINY, fed)   # private: isolate cache counts
+    mask = jax.tree_util.tree_map(
+        lambda _: jnp.asarray(1.0, jnp.float32), params)
+
+    def padded(Hs, seed0):
+        blists = [list(ds.batches(2, h, seed=seed0 + i))
+                  for i, h in enumerate(Hs)]
+        stacked, lens = fed_engine.pad_client_batches(
+            [stack_batches(iter(b)) for b in blists],
+            H_max=fed.local_iters_max)
+        return (jax.device_put(jax.tree_util.tree_map(jnp.asarray,
+                                                      stacked)),
+                jnp.asarray(lens, jnp.int32))
+
+    stacked, iters = padded([3, 1, 2], 10)
+    with compile_budget(run, 1, exact=True):   # warm-up traces the program
+        run.run_batch(params, stacked, iters=iters, mask=mask)
+
+    for k, Hs in enumerate(([1, 2, 1], [2, 3, 3])):
+        stacked, iters = padded(Hs, 40 + 10 * k)
+        with guard_rails(), compile_budget(run, 0, exact=True):
+            w_news, losses = run.run_batch(params, stacked, iters=iters,
+                                           mask=mask)
+        la = jax.device_get(losses)
+        for j, h in enumerate(Hs):
+            assert np.all(np.isfinite(la[j, :h]))
+            assert np.all(np.isnan(la[j, h:]))
+    assert run.num_compiled == 1
+
+
+def test_serving_ladder_steady_state_no_compiles(guard_rails,
+                                                 compile_budget, rng):
+    """PR-5 invariant: decode programs are bounded by the bucket ladder,
+    and an identical second stream replays entirely warm — zero new
+    programs, zero implicit transfers, bit-identical outputs."""
+    cfg = get_config("hymba-1.5b").reduced()
+    params = registry.init_params(jax.random.PRNGKey(8), cfg)
+    lengths, max_new = (3, 9, 21), (20, 12, 30)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lengths]
+
+    srv = ContinuousBatcher(params, cfg, max_slots=2, max_len=64,
+                            min_bucket=4, decode_mode="ring")
+    for p, m in zip(prompts, max_new):
+        srv.submit(p, max_new=m)
+    done = srv.run()
+    assert 2 <= srv.decode_compiles <= len(srv.decode_buckets)
+
+    for p, m in zip(prompts, max_new):
+        srv.submit(p, max_new=m)
+    with guard_rails(), compile_budget(srv._jits, 0, exact=True):
+        done2 = srv.run()                  # cumulative completed list
+    assert [r.out for r in done2[len(done):]] == [r.out for r in done]

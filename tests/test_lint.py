@@ -1,0 +1,291 @@
+"""repro-lint self-tests: each rule fires on its fixture exactly once,
+suppression and baselines behave, and the live tree is clean."""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import lint
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def only(findings, rule):
+    assert [f.rule for f in findings] == [rule], findings
+    return findings[0]
+
+
+# ---------------------------------------------------------------- R1
+
+def test_r1_direct_jit_decorator():
+    src = ("import jax\n"
+           "\n"
+           "@jax.jit\n"
+           "def f(x):\n"
+           "    return x\n")
+    f = only(lint.scan_sources({"src/repro/x.py": src}), "R1")
+    assert f.line == 3
+    assert "JitCache" in f.message
+    assert f.key == "@jax.jit"
+
+
+def test_r1_jit_in_loop():
+    src = ("import jax\n"
+           "\n"
+           "def run(fs, x):\n"
+           "    for g in fs:\n"
+           "        x = jax.jit(g)(x)\n"
+           "    return x\n")
+    f = only(lint.scan_sources({"src/repro/x.py": src}), "R1")
+    assert "loop" in f.message
+
+
+def test_r1_python_scalar_into_jitted_entry():
+    src = ("import jax\n"
+           "\n"
+           "# repro-lint: disable=R1\n"
+           "@jax.jit\n"
+           "def f(n):\n"
+           "    return n\n"
+           "\n"
+           "def call(x):\n"
+           "    return f(x.shape[0])\n")
+    f = only(lint.scan_sources({"src/repro/x.py": src}), "R1")
+    assert "retraces" in f.message and f.line == 9
+
+
+def test_r1_respects_import_alias():
+    src = ("from jax import jit as J\n"
+           "\n"
+           "@J\n"
+           "def f(x):\n"
+           "    return x\n")
+    only(lint.scan_sources({"src/repro/x.py": src}), "R1")
+
+
+def test_r1_ignores_jitcache_module():
+    src = ("import jax\n"
+           "w = jax.jit(lambda x: x)\n")
+    assert lint.scan_sources(
+        {"src/repro/core/compile_cache.py": src}) == []
+
+
+# ---------------------------------------------------------------- R2
+
+def test_r2_host_sync_reachable_from_scan():
+    src = ("import jax\n"
+           "\n"
+           "def body(c, x):\n"
+           "    return c, float(x)\n"
+           "\n"
+           "def run(xs):\n"
+           "    return jax.lax.scan(body, 0.0, xs)\n")
+    f = only(lint.scan_sources({"src/repro/x.py": src}), "R2")
+    assert "float()" in f.message and f.line == 4
+
+
+def test_r2_np_asarray_reachable_through_call_graph():
+    # helper is only traced transitively: scan body -> helper
+    src = ("import jax\n"
+           "import numpy as np\n"
+           "\n"
+           "def helper(x):\n"
+           "    return np.asarray(x)\n"
+           "\n"
+           "def body(c, x):\n"
+           "    return c, helper(x)\n"
+           "\n"
+           "def run(xs):\n"
+           "    return jax.lax.scan(body, 0.0, xs)\n")
+    f = only(lint.scan_sources({"src/repro/x.py": src}), "R2")
+    assert "numpy.asarray" in f.message and f.line == 5
+
+
+def test_r2_if_on_traced_param():
+    src = ("import jax\n"
+           "\n"
+           "def body(c, x):\n"
+           "    if x:\n"
+           "        return c, x\n"
+           "    return c, x\n"
+           "\n"
+           "def run(xs):\n"
+           "    return jax.lax.scan(body, 0.0, xs)\n")
+    f = only(lint.scan_sources({"src/repro/x.py": src}), "R2")
+    assert "`if` on traced value" in f.message
+
+
+def test_r2_exemptions():
+    # shape-derived ints are trace-time constants; `if` on attribute
+    # access is static config branching; both must stay silent
+    src = ("import jax\n"
+           "\n"
+           "def body(c, x):\n"
+           "    n = int(x.shape[0])\n"
+           "    if c.flag:\n"
+           "        return c, x * n\n"
+           "    return c, x\n"
+           "\n"
+           "def run(xs):\n"
+           "    return jax.lax.scan(body, 0.0, xs)\n")
+    assert lint.scan_sources({"src/repro/x.py": src}) == []
+
+
+def test_r2_untraced_function_is_silent():
+    src = ("def report(x):\n"
+           "    return float(x)\n")
+    assert lint.scan_sources({"src/repro/x.py": src}) == []
+
+
+# ---------------------------------------------------------------- R3
+
+def test_r3_read_after_jitcache_donation():
+    src = ("def step(pool, fn, params, batch):\n"
+           "    out = pool.call('run', fn, (1,), (params, batch))\n"
+           "    return out, batch.sum()\n")
+    f = only(lint.scan_sources({"src/repro/x.py": src}), "R3")
+    assert "'batch'" in f.message and f.line == 3
+
+
+def test_r3_rebind_clears_donation():
+    src = ("def step(pool, fn, params, batch):\n"
+           "    params = pool.call('run', fn, (0,), (params, batch))\n"
+           "    return params\n")
+    assert lint.scan_sources({"src/repro/x.py": src}) == []
+
+
+def test_r3_donate_argnums():
+    src = ("import jax\n"
+           "\n"
+           "def go(f, stack):\n"
+           "    out = jax.jit(f, donate_argnums=(0,))(stack)\n"
+           "    return out, stack\n")
+    fs = lint.scan_sources({"src/repro/x.py": src})
+    f = only([x for x in fs if x.rule == "R3"], "R3")
+    assert "'stack'" in f.message
+
+
+# ---------------------------------------------------------------- R4
+
+def test_r4_orphan_kernel():
+    files = {
+        "src/repro/kernels/deadop.py": ("def dead_kernel(x):\n"
+                                        "    return x\n"),
+        "src/repro/core/user.py": "def use():\n    return 1\n",
+    }
+    f = only(lint.scan_sources(files), "R4")
+    assert "deadop.dead_kernel" in f.message
+    assert f.key == "deadop.dead_kernel"
+
+
+def test_r4_referenced_kernel_is_alive():
+    files = {
+        "src/repro/kernels/op.py": "def my_kernel(x):\n    return x\n",
+        "src/repro/core/user.py": ("from repro.kernels.op import "
+                                   "my_kernel\n"
+                                   "def use(x):\n"
+                                   "    return my_kernel(x)\n"),
+    }
+    assert lint.scan_sources(files) == []
+
+
+# ---------------------------------------------------------------- R5
+
+def test_r5_bare_assert():
+    src = ("def f(x):\n"
+           "    assert x > 0, 'positive'\n"
+           "    return x\n")
+    f = only(lint.scan_sources({"src/repro/x.py": src}), "R5")
+    assert "python -O" in f.message and f.line == 2
+
+
+# ------------------------------------------------------- suppression
+
+def test_suppression_same_line_and_preceding_line():
+    src = ("def f(x):\n"
+           "    assert x > 0  # repro-lint: disable=R5\n"
+           "    # repro-lint: disable=R5\n"
+           "    assert x < 9\n"
+           "    return x\n")
+    assert lint.scan_sources({"src/repro/x.py": src}) == []
+
+
+def test_suppression_is_rule_specific():
+    src = ("def f(x):\n"
+           "    assert x > 0  # repro-lint: disable=R1\n"
+           "    return x\n")
+    only(lint.scan_sources({"src/repro/x.py": src}), "R5")
+
+
+def test_suppression_disable_all():
+    src = ("def f(x):\n"
+           "    assert x > 0  # repro-lint: disable=all\n"
+           "    return x\n")
+    assert lint.scan_sources({"src/repro/x.py": src}) == []
+
+
+# ---------------------------------------------------------- baseline
+
+def test_baseline_roundtrip_and_determinism(tmp_path):
+    src = {"src/repro/x.py": ("def f(x):\n"
+                              "    assert x > 0\n"
+                              "    assert x < 9\n"
+                              "    return x\n")}
+    findings = lint.scan_sources(src)
+    assert len(findings) == 2
+    text = lint.make_baseline(findings)
+    assert text == lint.make_baseline(list(reversed(findings)))
+    bp = tmp_path / "b.json"
+    bp.write_text(text)
+    new = lint.mark_baselined(lint.scan_sources(src),
+                              lint.load_baseline(bp))
+    assert new == []
+
+
+def test_baseline_key_survives_line_moves(tmp_path):
+    before = {"src/repro/x.py": "def f(x):\n    assert x > 0\n"}
+    bp = tmp_path / "b.json"
+    bp.write_text(lint.make_baseline(lint.scan_sources(before)))
+    # same finding, shifted three lines down: still baselined
+    after = {"src/repro/x.py": ("import os\n"
+                                "\n"
+                                "\n"
+                                "def f(x):\n"
+                                "    assert x > 0\n")}
+    new = lint.mark_baselined(lint.scan_sources(after),
+                              lint.load_baseline(bp))
+    assert new == []
+
+
+def test_new_finding_not_in_baseline_is_flagged(tmp_path):
+    bp = tmp_path / "b.json"
+    bp.write_text(lint.make_baseline([]))
+    findings = lint.scan_sources(
+        {"src/repro/x.py": "def f(x):\n    assert x\n"})
+    new = lint.mark_baselined(findings, lint.load_baseline(bp))
+    assert len(new) == 1 and not new[0].baselined
+
+
+# --------------------------------------------------------- live tree
+
+def test_live_tree_has_zero_non_baselined_findings():
+    findings = lint.scan_paths(ROOT)
+    baseline = lint.load_baseline(ROOT / "tools" / "lint_baseline.json")
+    new = lint.mark_baselined(findings, baseline)
+    assert new == [], ("non-baselined lint findings:\n" + "\n".join(
+        f"{f.path}:{f.line}: {f.rule} {f.message}" for f in new))
+
+
+def test_live_tree_tracks_known_orphans():
+    """The ROADMAP's orphaned Pallas kernels stay visible (proved dead by
+    R4, tracked in the baseline) until they are fused into serving."""
+    keys = {f.key for f in lint.scan_paths(ROOT) if f.rule == "R4"}
+    assert {"ops.swa_attention", "ops.ssd_scan"} <= keys
+
+
+def test_cli_check_passes_on_tree():
+    import subprocess
+    import sys
+    res = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "repro_lint.py"),
+         "--check"], capture_output=True, text=True)
+    assert res.returncode == 0, res.stdout + res.stderr
