@@ -75,4 +75,24 @@ def kernel_bench():
                  f"{B*Sq/dt:.0f}_tok_per_s_host"))
     print(f"  ssd oracle (S=2048, mamba2-130m layer): {dt*1e3:.2f} ms "
           f"({B*Sq/dt:.0f} tok/s on host)")
+
+    # fused decode kernels (PR 7): modeled HBM bytes per decode step vs the
+    # einsum path they replace — at gemma3-12b attend and mamba2-130m SSD
+    # shapes.  Decode is memory-bound, so the byte ratio IS the speedup
+    # ceiling on TPU; wall time in interpret mode would measure Python.
+    from repro.roofline.analysis import attend_decode_bytes, ssd_decode_bytes
+    kv, heads, hd, n_ctx = 8, 16, 256, 1024      # gemma3-12b, 1k context
+    af = attend_decode_bytes(n_ctx, kv, heads, hd)
+    au = attend_decode_bytes(n_ctx, kv, heads, hd, fused=False)
+    rows.append(("kernel_decode_attend_bytes", 0.0,
+                 f"hbm_fused/einsum={af/au:.2f}"))
+    print(f"  decode attend (gemma3-12b heads, n_ctx={n_ctx}): fused reads "
+          f"{af/au:.0%} of einsum HBM bytes/step")
+    H, P, N = 24, 64, 128                        # mamba2-130m layer
+    sf = ssd_decode_bytes(H, P, N)
+    su = ssd_decode_bytes(H, P, N, fused=False)
+    rows.append(("kernel_decode_ssd_bytes", 0.0,
+                 f"hbm_fused/einsum={sf/su:.2f}"))
+    print(f"  decode ssd (mamba2-130m layer): fused reads {sf/su:.0%} of "
+          f"einsum HBM bytes/step")
     return rows

@@ -49,7 +49,7 @@ def _stream(rng, vocab: int, lengths) -> list:
 
 
 def _serve(params, cfg, prompts, *, max_slots, max_len, gen, min_bucket,
-           decode_mode="ring", warm=False):
+           decode_mode="ring", decode_kernel="pallas", warm=False):
     """Serve the stream once; with ``warm=True`` serve it twice and time
     only the second pass — steady-state throughput with every program on
     the ladder already compiled (the decode comparison's honest number;
@@ -57,7 +57,8 @@ def _serve(params, cfg, prompts, *, max_slots, max_len, gen, min_bucket,
     """
     srv = ContinuousBatcher(params, cfg, max_slots=max_slots,
                             max_len=max_len, min_bucket=min_bucket,
-                            decode_mode=decode_mode)
+                            decode_mode=decode_mode,
+                            decode_kernel=decode_kernel)
     if warm:
         for p in prompts:
             srv.submit(p, max_new=gen)
@@ -125,11 +126,33 @@ def serving_bench(smoke: bool = False, out_json: str | None = ARTIFACT):
     dec_ring = _serve(dec_params, dec_cfg, dec_prompts,
                       max_slots=max_slots, max_len=max_len, gen=dec_gen,
                       min_bucket=8, decode_mode="ring", warm=True)
+    # fused (Pallas) vs einsum-oracle decode kernels on the same ring path
+    dec_einsum = _serve(dec_params, dec_cfg, dec_prompts,
+                        max_slots=max_slots, max_len=max_len, gen=dec_gen,
+                        min_bucket=8, decode_mode="ring",
+                        decode_kernel="einsum", warm=True)
+    assert dec_einsum.pop("outputs") == dec_ring["outputs"], \
+        "fused decode kernels changed greedy outputs"
     assert dec_ring.pop("outputs") == dec_uniform.pop("outputs"), \
         "ring/bucketed decode changed greedy outputs"
     assert dec_uniform["decode_compiles"] == 1
     assert dec_ring["decode_compiles"] <= max(1,
                                               dec_ring["n_decode_buckets"])
+
+    # modeled per-stream HBM bytes for one decode-attend step at the
+    # largest K-extent: the quantity the fused kernels exist to cut on TPU
+    # (interpret-mode wall clock is not it — see kernel_bench.py)
+    from repro.roofline.analysis import attend_decode_bytes
+    hd = dec_cfg.d_model // dec_cfg.num_heads
+    model_bytes = {
+        "n_ctx": max_len,
+        "fused": attend_decode_bytes(max_len, dec_cfg.num_kv_heads,
+                                     dec_cfg.num_heads, hd),
+        "einsum": attend_decode_bytes(max_len, dec_cfg.num_kv_heads,
+                                      dec_cfg.num_heads, hd, fused=False),
+    }
+    model_bytes["fused_over_einsum"] = (model_bytes["fused"]
+                                        / model_bytes["einsum"])
 
     report = {
         "config": {"arch": cfg.name, "max_slots": max_slots,
@@ -150,6 +173,13 @@ def serving_bench(smoke: bool = False, out_json: str | None = ARTIFACT):
             "decode_tok_per_s_ratio":
                 dec_ring["gen_tok_per_s"]
                 / max(dec_uniform["gen_tok_per_s"], 1e-9),
+            "fused": {
+                "pallas": {k: dec_ring[k] for k in
+                           ("wall_s", "gen_tok_per_s", "decode_compiles")},
+                "einsum": {k: dec_einsum[k] for k in
+                           ("wall_s", "gen_tok_per_s", "decode_compiles")},
+                "modeled_attend_bytes_per_stream_step": model_bytes,
+            },
         },
     }
     rows = [
@@ -167,6 +197,10 @@ def serving_bench(smoke: bool = False, out_json: str | None = ARTIFACT):
          f"{dec_ring['gen_tok_per_s']:.1f} tok/s, W={dec_cfg.sliding_window}"
          f" rings + K-extent ladder ({dec_ring['decode_compiles']} <= "
          f"{dec_ring['n_decode_buckets']} decode compiles)"),
+        ("decode_fused_einsum_oracle", dec_einsum["wall_s"] * 1e6,
+         f"{dec_einsum['gen_tok_per_s']:.1f} tok/s einsum oracle; fused "
+         f"attend models {model_bytes['fused_over_einsum']:.0%} of its "
+         f"HBM bytes/step at n_ctx={max_len}"),
     ]
     for name, us, derived in rows:
         print(f"  {name}: {us / 1e6:.2f}s — {derived}")

@@ -31,6 +31,13 @@ dim of the single-stream step — every family (dense / SWA / MoE / SSM /
 hybrid) works in both modes. ``min_bucket=0`` keeps the legacy
 per-request-length admission as a parity oracle (and the bench's
 compile-count foil).
+
+Ring-mode decode runs the attends and the SSM recurrence as fused Pallas
+kernels by default (``decode_kernel="pallas"`` — see ``kernels/ops.py``:
+ring attend, ladder-extent attend, SSD step; one HBM pass per cache,
+score/update tensors never materialized). ``decode_kernel="einsum"``
+keeps the PR-5 jnp decode as the parity oracle; uniform mode always uses
+it. Greedy tokens are identical either way (tested per family).
 """
 from __future__ import annotations
 
@@ -49,6 +56,7 @@ from repro.models import lm, registry
 from repro.types import ModelConfig
 
 DECODE_MODES = ("ring", "uniform")
+DECODE_KERNELS = ("pallas", "einsum")
 
 
 @dataclass
@@ -82,11 +90,16 @@ class ContinuousBatcher:
     full-attention layers (``decode_compiles`` bounded by
     ``len(self.decode_buckets)``). ``decode_mode="uniform"`` keeps the
     legacy full-cache decode — the parity oracle.
+
+    ``decode_kernel="pallas"`` (default) fuses the ring-mode decode hot
+    path into the Pallas decode kernels; ``"einsum"`` is the jnp parity
+    oracle. Uniform mode ignores the flag (always einsum).
     """
 
     def __init__(self, params, cfg: ModelConfig, max_slots: int = 4,
                  max_len: int = 256, dtype=jnp.float32,
-                 min_bucket: int = 8, decode_mode: str = "ring"):
+                 min_bucket: int = 8, decode_mode: str = "ring",
+                 decode_kernel: str = "pallas"):
         if cfg.is_encdec or cfg.family == "resnet3d":
             raise ValueError(f"{cfg.family}: not a decoder-only server")
         if cfg.prefix_len:
@@ -96,6 +109,11 @@ class ContinuousBatcher:
         if decode_mode not in DECODE_MODES:
             raise ValueError(f"decode_mode {decode_mode!r} not in "
                              f"{DECODE_MODES}")
+        if decode_kernel not in DECODE_KERNELS:
+            raise ValueError(f"decode_kernel {decode_kernel!r} not in "
+                             f"{DECODE_KERNELS}")
+        self.decode_kernel = decode_kernel if decode_mode == "ring" \
+            else "einsum"
         self.params, self.cfg = params, cfg
         self.max_slots, self.max_len = max_slots, max_len
         self.min_bucket = int(min_bucket)
@@ -140,13 +158,15 @@ class ContinuousBatcher:
         ``k_ext`` is the static K-extent full-attention layers attend
         against in ring mode (one program per ladder rung)."""
         cfg, ring = self.cfg, self.decode_mode == "ring"
+        kern = self.decode_kernel
 
         def one(params, token, cache, pos):
             cache = jax.tree_util.tree_map(
                 lambda a: jnp.expand_dims(a, 1), cache)
             if ring:
                 logits, cache = registry.decode_step_grouped(
-                    params, cfg, token[None], cache, pos, k_ext=k_ext)
+                    params, cfg, token[None], cache, pos, k_ext=k_ext,
+                    decode_kernel=kern)
             else:
                 logits, cache = registry.decode_step(params, cfg,
                                                      token[None], cache, pos)
@@ -213,10 +233,13 @@ class ContinuousBatcher:
         Full-attention layers copy their bucket prefix as before.  SWA
         layers gather into ring layout per row (``lm.ring_source_positions``
         — the latest prompt position congruent to each slot mod W).  Slots
-        whose position would be negative (prompt shorter than W) hold
-        clipped garbage; decode masks them by construction
-        (``ring_decode_attend`` recomputes each slot's absolute position
-        from ``pos`` and masks negatives)."""
+        whose position would be negative (prompt shorter than W) are
+        ZEROED rather than left holding a clipped gather of position 0:
+        decode masks them by construction (``ring_decode_attend``
+        recomputes each slot's absolute position from ``pos`` and masks
+        negatives), but an explicit zero keeps the cache state
+        install-order independent and the masking testable
+        (tests/test_serving.py::test_ring_install_short_prompt_slots)."""
         m = slots.shape[0]
         out = dict(full)
         for key in ("ssm_state", "conv_state"):
@@ -235,9 +258,11 @@ class ContinuousBatcher:
                 p = lm.ring_source_positions(lengths[:m] - 1, W)
                 take = jnp.clip(p, 0, S_b - 1)[None, :, :, None, None]
                 wi = jnp.asarray(self._wl)
+                written = (p >= 0)[None, :, :, None, None]
                 for src, dst in (("k", "k_win"), ("v", "v_win")):
                     g = jnp.take_along_axis(
                         group[src][wi][:, :m], take, axis=2)
+                    g = jnp.where(written, g, 0)
                     out[dst] = full[dst].at[:, slots].set(
                         g.astype(full[dst].dtype))
         return out

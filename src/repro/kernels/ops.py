@@ -15,8 +15,10 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.kd_loss import kd_loss_pallas
-from repro.kernels.ssd_scan import ssd_scan_pallas
-from repro.kernels.swa_attention import swa_attention_pallas
+from repro.kernels.ssd_scan import ssd_decode_step_pallas, ssd_scan_pallas
+from repro.kernels.swa_attention import (extent_decode_attend_pallas,
+                                         ring_decode_attend_pallas,
+                                         swa_attention_pallas)
 
 
 def _interpret() -> bool:
@@ -63,7 +65,37 @@ def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 128):
                            interpret=_interpret())
 
 
+# Decode-step kernels are NOT jitted here: they run inside the serving
+# decode programs, which JitCache compiles as a whole (one program per
+# ladder rung) — a nested module-level jit would fragment that cache.
+def ring_decode_attend(q, k, v, pos, window):
+    """Fused one-token SWA attend over a W-slot ring cache.
+
+    q: (B, KV, G, D); k/v: (B, W, KV, D); pos/window traced int32
+    scalars.  Modular slot->position mapping and window masking happen
+    inside the kernel (one HBM pass over the ring)."""
+    return ring_decode_attend_pallas(q, k, v, pos, window,
+                                     interpret=_interpret())
+
+
+def extent_decode_attend(q, k, v, pos, window, k_ext: int):
+    """Fused one-token attend over the first ``k_ext`` cache positions.
+
+    q: (B, KV, G, D); k/v: (B, S_max, KV, D); static ``k_ext`` bounds the
+    HBM read via the BlockSpec — the ladder-bucketed decode program only
+    streams the live prefix of the uniform cache."""
+    return extent_decode_attend_pallas(q, k, v, pos, window, k_ext,
+                                       interpret=_interpret())
+
+
+def ssd_decode_step(xh, dt, A, Bm, Cm, state):
+    """Fused one-token SSD recurrence (decay + rank-1 update + readout)."""
+    return ssd_decode_step_pallas(xh, dt, A, Bm, Cm, state,
+                                  interpret=_interpret())
+
+
 # re-export oracles for convenience
 kd_loss_ref = ref.kd_loss_ref
 swa_attention_ref = ref.swa_attention_ref
 ssd_scan_ref = ref.ssd_scan_ref
+ssd_sequential_ref = ref.ssd_sequential_ref

@@ -13,6 +13,14 @@ Per chunk (Q = chunk length):
   Yin  = ((C Bᵀ) ⊙ L) (x·dt)    intra-chunk
   Yout = (C hᵀ) ⊙ exp(cumsum dA)  inter-chunk read
   h    = exp(Σ dA) · h + Σ_q dt_q·decay_q·(x_q ⊗ B_q)
+
+``ssd_decode_step_pallas`` is the serving-side sibling: ONE recurrent
+token step, fused — the state decay ``exp(dt·A)``, the rank-1 update
+``dt·x⊗B``, and the ``C`` readout run in a single VMEM-resident kernel
+per stream, so the (H, P, N) state makes exactly one HBM round trip and
+the update tensor is never materialized (the einsum path writes it out).
+It mirrors ``models.ssm.ssm_decode_step``'s op sequence exactly, so the
+fused decode is bit-identical to the einsum oracle in interpret mode.
 """
 from __future__ import annotations
 
@@ -22,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.roofline.analysis import ssd_decode_bytes, ssd_decode_flops
 
 
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref,
@@ -111,3 +121,54 @@ def ssd_scan_pallas(x, dt, A, Bm, Cm, chunk: int, interpret: bool = True):
 
     y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
     return y, hout.reshape(B, H, P, N)
+
+
+def _decode_kernel(dt_ref, a_ref, x_ref, b_ref, c_ref, h_ref,
+                   y_ref, hout_ref):
+    dt = dt_ref[...]                                  # (B, H) f32
+    A = a_ref[...]                                    # (H,) f32
+    xh = x_ref[...]                                   # (B, H, P)
+    Bm = b_ref[...]                                   # (B, N)
+    Cm = c_ref[...]                                   # (B, N)
+    h = h_ref[...]                                    # (B, H, P, N)
+    dA = jnp.exp(dt * A[None, :])
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt.astype(xh.dtype), xh, Bm)
+    h_new = h * dA[..., None, None].astype(h.dtype) + upd
+    hout_ref[...] = h_new.astype(hout_ref.dtype)
+    y_ref[...] = jnp.einsum("bhpn,bn->bhp", h_new, Cm).astype(y_ref.dtype)
+
+
+def ssd_decode_step_pallas(xh, dt, A, Bm, Cm, state, interpret: bool = True):
+    """ONE fused recurrent SSD token step for the whole decode batch.
+
+    xh: (B, H, P), dt: (B, H) f32 (softplus'ed), A: (H,) f32,
+    Bm/Cm: (B, N), state: (B, H, P, N).  Returns (y (B, H, P), new_state)
+    — op-for-op the ``dA / upd / state / y`` block of
+    ``models.ssm.ssm_decode_step``, fused so the state makes one HBM
+    round trip and ``upd`` never leaves VMEM.  dt == 0 rows are exact
+    no-ops on the state (dA = 1, upd = 0), which is what makes ladder
+    pad steps safe.
+
+    The grid is a single program over the full (decode-sized) batch
+    rather than one per stream: the batched einsums then trace to the
+    exact dot_generals of the einsum oracle, keeping fused decode
+    bit-identical (per-stream blocks change the fp32 contraction order).
+    """
+    B, H, P = xh.shape
+    N = Bm.shape[-1]
+    y_dtype = jnp.result_type(state.dtype, Cm.dtype)
+    cost = {}
+    if hasattr(pl, "CostEstimate"):
+        cost = {"cost_estimate": pl.CostEstimate(
+            flops=B * ssd_decode_flops(H, P, N),
+            transcendentals=B * H,
+            bytes_accessed=B * ssd_decode_bytes(
+                H, P, N, dtype_bytes=jnp.dtype(state.dtype).itemsize))}
+    return pl.pallas_call(
+        _decode_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, P), y_dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), state.dtype),
+        ],
+        interpret=interpret, **cost,
+    )(dt, A, xh, Bm, Cm, state)

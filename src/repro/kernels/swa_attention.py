@@ -10,6 +10,29 @@ physical tile index). Full attention is the same kernel with w = S.
 
 Layout: q, k, v are (BH, S, D) — heads pre-folded, GQA expansion done in
 ops.py. MXU-aligned D (64/128/256); block sizes default 128.
+
+This module also holds the two *decode*-side kernels serving's ring/ladder
+hot path fuses into (one grid step per stream, the whole step in VMEM):
+
+``ring_decode_attend_pallas``
+    One-token attend against a W-slot ring cache.  The modular-slot
+    masking runs *inside* the kernel: slot ``s`` holds the latest absolute
+    position ``p ≡ s (mod W)``, so ``k_pos = pos - mod(pos - s, W)`` is
+    recomputed from the traced ``pos`` scalar (SMEM) and negative /
+    out-of-window slots are masked — one HBM pass over the W slots,
+    no gathered position vector, no score round-trip.
+
+``extent_decode_attend_pallas``
+    One-token attend for ladder-bucketed full attention: the static
+    ``k_ext`` is a *kernel parameter* (the BlockSpec reads only the first
+    ``k_ext`` cache positions — the ladder rung, not ``S_max``) and the
+    per-stream ``k_len = pos + 1`` mask is applied in-kernel from the
+    traced position.
+
+Both mirror ``models.attention.gqa_attention``'s einsum/softmax ops
+exactly (same dot shapes, same additive -1e30 bias, same divide-after-sum
+softmax), so the fused decode is bit-identical to the einsum oracle in
+interpret mode — the serving parity tests assert token equality.
 """
 from __future__ import annotations
 
@@ -19,6 +42,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.roofline.analysis import attend_decode_bytes, attend_decode_flops
 
 NEG_INF = -1e30
 
@@ -80,6 +105,135 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     def _done():
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode-side kernels (one query token per stream, serving hot path)
+# ---------------------------------------------------------------------------
+
+def _decode_attend(q, k, v, bias, scale, out_dtype):
+    """Shared one-token attend body: the exact op sequence of
+    ``models.attention.gqa_attention``'s attend() closure (f32 score
+    einsum, additive bias, max-subtract/divide softmax, f32 p·V) so the
+    fused kernels stay bit-identical to the einsum oracle."""
+    s = jnp.einsum("kgd,skd->kgs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = s + bias[None, None, :]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    un = jnp.exp(s - jax.lax.stop_gradient(m))
+    p = (un / jnp.sum(un, axis=-1, keepdims=True)).astype(q.dtype)
+    return jnp.einsum("kgs,skd->kgd", p, v,
+                      preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def _window_bias(pos, w, k_pos):
+    """Additive mask mirroring ``models.attention._mask_bias`` for a
+    single query at absolute position ``pos``: causal, in-window
+    (w == 0 -> full), and unwritten (k_pos < 0) slots masked."""
+    w_eff = jnp.where(w == 0, jnp.int32(2 ** 30), w)
+    ok = (pos >= k_pos) & (pos - k_pos < w_eff) & (k_pos >= 0)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _ring_decode_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
+                        *, W, scale):
+    pos = pos_ref[0]
+    # modular-slot masking inside the kernel: slot s holds the latest
+    # absolute position p <= pos with p ≡ s (mod W); negative = unwritten
+    k_pos = pos - jnp.mod(pos - jax.lax.iota(jnp.int32, W), W)
+    bias = _window_bias(pos, win_ref[0], k_pos)
+    o_ref[0, ...] = _decode_attend(q_ref[0], k_ref[0], v_ref[0], bias,
+                                   scale, o_ref.dtype)
+
+
+def _cost_kwargs(n_streams, n_ctx, kv, G, D, dtype):
+    if not hasattr(pl, "CostEstimate"):    # older jax: skip the annotation
+        return {}
+    H = kv * G
+    return {"cost_estimate": pl.CostEstimate(
+        flops=n_streams * attend_decode_flops(n_ctx, H, D),
+        transcendentals=n_streams * H * n_ctx,
+        bytes_accessed=n_streams * attend_decode_bytes(
+            n_ctx, kv, H, D, dtype_bytes=jnp.dtype(dtype).itemsize))}
+
+
+def ring_decode_attend_pallas(q, k, v, pos, window, interpret: bool = True):
+    """One-token ring-buffer SWA decode attend.
+
+    q: (B, KV, G, D) — the single query token, grouped heads;
+    k, v: (B, W, KV, D) ring caches (slot s = latest position ≡ s mod W,
+    the new token already written at slot ``pos % W``); ``pos`` /
+    ``window`` int32 scalars (python ints or traced — they ride in SMEM,
+    so one program serves every step). Returns (B, KV, G, D).
+    """
+    B, KV, G, D = q.shape
+    W = k.shape[1]
+    pos = jnp.reshape(jnp.asarray(pos, jnp.int32), (1,))
+    win = jnp.reshape(jnp.asarray(window, jnp.int32), (1,))
+    return pl.pallas_call(
+        functools.partial(_ring_decode_kernel, W=W, scale=D ** -0.5),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, KV, G, D), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, W, KV, D), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, W, KV, D), lambda b: (b, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, KV, G, D), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+        **_cost_kwargs(B, W, KV, G, D, k.dtype),
+    )(pos, win, q, k, v)
+
+
+def _extent_decode_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
+                          *, k_ext, scale):
+    pos = pos_ref[0]
+    k_pos = jax.lax.iota(jnp.int32, k_ext)
+    bias = _window_bias(pos, win_ref[0], k_pos)
+    # per-stream k_len mask (cache positions beyond the active prefix),
+    # mirroring attn_forward's additive k_len term exactly
+    bias = bias + jnp.where(k_pos < pos + 1, 0.0, NEG_INF).astype(
+        jnp.float32)
+    o_ref[0, ...] = _decode_attend(q_ref[0], k_ref[0], v_ref[0], bias,
+                                   scale, o_ref.dtype)
+
+
+def extent_decode_attend_pallas(q, k, v, pos, window, k_ext: int,
+                                interpret: bool = True):
+    """One-token ladder-bucketed full-attention decode attend.
+
+    q: (B, KV, G, D); k, v: (B, S_max, KV, D) uniform caches (the new
+    token already written at position ``pos``).  ``k_ext`` (static — one
+    program per ladder rung) bounds the read: the BlockSpec loads only
+    the first ``k_ext`` cache positions, so the kernel's HBM traffic is
+    O(k_ext) however large the cache.  Requires ``pos < k_ext`` (the
+    serving ladder guarantees ``k_ext >= max(pos) + 1``); positions in
+    ``[pos + 1, k_ext)`` are masked in-kernel.  Returns (B, KV, G, D).
+    """
+    B, KV, G, D = q.shape
+    S_max = k.shape[1]
+    if not 1 <= k_ext <= S_max:
+        raise ValueError(f"k_ext {k_ext} out of range [1, {S_max}]")
+    pos = jnp.reshape(jnp.asarray(pos, jnp.int32), (1,))
+    win = jnp.reshape(jnp.asarray(window, jnp.int32), (1,))
+    return pl.pallas_call(
+        functools.partial(_extent_decode_kernel, k_ext=k_ext,
+                          scale=D ** -0.5),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, KV, G, D), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, k_ext, KV, D), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, k_ext, KV, D), lambda b: (b, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, KV, G, D), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+        **_cost_kwargs(B, k_ext, KV, G, D, k.dtype),
+    )(pos, win, q, k, v)
 
 
 def swa_attention_pallas(q, k, v, window: int, causal: bool = True,

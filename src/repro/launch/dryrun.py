@@ -122,22 +122,17 @@ def lower_combo(arch: str, shape_name: str, mesh, mesh_name: str,
             ring = opts.get("ring_cache", False) and \
                 cfg.family in ("dense", "moe", "hybrid", "vlm", "ssm") and \
                 cfg.sliding_window > 0
+            tok, cstruct, posst = registry.decode_spec(cfg, shape, ACT_DTYPE)
             if ring:
                 from repro.models import lm as lm_mod
                 cstruct = jax.eval_shape(
                     lambda: lm_mod.init_ring_cache(cfg, shape.global_batch,
                                                    shape.seq_len, ACT_DTYPE))
-            else:
-                cstruct = jax.eval_shape(
-                    lambda: registry.init_cache(cfg, shape.global_batch,
-                                                shape.seq_len, ACT_DTYPE))
             jf, _ = steps_mod.jit_serve_step(
                 cfg, mesh, shape, pstruct, cstruct, donate=True,
                 unroll=opts.get("serve_unroll", False),
                 window_slice=opts.get("window_slice", False), ring=ring)
-            tok = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
-            lowered = jf.lower(pstruct, tok, cstruct,
-                               jax.ShapeDtypeStruct((), jnp.int32))
+            lowered = jf.lower(pstruct, tok, cstruct, posst)
 
         compiled = lowered.compile()
 

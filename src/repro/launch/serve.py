@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import registry
+from repro.types import ShapeConfig
 
 
 def serve_continuous(cfg, args) -> int:
@@ -42,7 +43,8 @@ def serve_continuous(cfg, args) -> int:
     srv = ContinuousBatcher(params, cfg, max_slots=args.batch,
                             max_len=max_len,
                             min_bucket=args.prefill_buckets,
-                            decode_mode=args.decode_mode)
+                            decode_mode=args.decode_mode,
+                            decode_kernel=args.decode_kernel)
     lengths = rng.integers(1, args.prompt_len + 1, args.requests)
     for n in lengths:
         srv.submit(rng.integers(0, cfg.vocab_size, int(n), dtype=np.int32),
@@ -86,6 +88,11 @@ def main(argv=None):
                     help="ring: per-layer-kind decode caches (SWA ring "
                          "buffers + ladder-bucketed K-extents); uniform: "
                          "legacy full-cache decode (parity oracle)")
+    ap.add_argument("--decode-kernel", choices=["pallas", "einsum"],
+                    default="pallas",
+                    help="ring-mode decode attends/recurrence: fused "
+                         "Pallas kernels (default) or the jnp einsum "
+                         "parity oracle")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -102,15 +109,15 @@ def main(argv=None):
     max_len = args.prompt_len + args.gen
     cache = registry.init_cache(cfg, args.batch, max_len, jnp.float32)
 
-    batch = {"tokens": jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len),
-                     dtype=np.int32))}
+    # synthesize the prompt batch from the registry's canonical spec
+    # (batch_spec text length is S - prefix_len, so ask for prompt+prefix)
+    shape = ShapeConfig(name="serve", global_batch=args.batch,
+                        seq_len=args.prompt_len + cfg.prefix_len,
+                        kind="decode")
+    batch = registry.synth_batch(rng, cfg, shape, act_dtype=jnp.float32)
+    batch.pop("labels", None)           # generation, not scoring
     if cfg.is_encdec:
-        batch = {"src_embeds": jnp.asarray(rng.standard_normal(
-            (args.batch, args.prompt_len, cfg.d_model), dtype=np.float32))}
-    elif cfg.prefix_len:
-        batch["prefix_embeds"] = jnp.asarray(rng.standard_normal(
-            (args.batch, cfg.prefix_len, cfg.d_model), dtype=np.float32))
+        batch = {"src_embeds": batch["src_embeds"]}
 
     t0 = time.perf_counter()
     if cfg.is_encdec:

@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.models.common import apply_rope
 
 NEG_INF = -1e30
@@ -35,7 +36,8 @@ def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   k_offset: jax.Array | int = 0,
                   k_positions: jax.Array | None = None,
                   k_len: jax.Array | None = None,
-                  q_chunk: int = 1024) -> jax.Array:
+                  q_chunk: int = 1024,
+                  kernel: str = "einsum") -> jax.Array:
     """q: (B, Sq, H, D); k, v: (B, Sk, KV, D) -> (B, Sq, H, D).
 
     ``q_offset``/``k_offset`` are the absolute positions of q[0]/k[0]
@@ -43,10 +45,28 @@ def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     overrides them with an arbitrary per-slot position vector (ring-buffer
     caches; negative = unwritten slot, always masked). ``k_len`` masks
     absolute cache positions >= k_len (pre-allocated cache).
+
+    ``kernel="pallas"`` routes the no-cache causal self-attend
+    (training/scoring: Sq == Sk, no offsets/positions/k_len) through the
+    flash SWA kernel (``kernels.ops.swa_attention``); requires a static
+    int ``window``. Everything else uses the einsum path.
     """
     B, Sq, H, D = q.shape
     _, Sk, KV, _ = k.shape
     G = H // KV
+    if kernel == "pallas":
+        if (k_positions is not None or k_len is not None or not causal
+                or Sq != Sk or not isinstance(window, int)):
+            raise ValueError(
+                "kernel='pallas' supports the causal self-attend only "
+                "(Sq == Sk, static int window, no k_positions/k_len)")
+        kg = jnp.repeat(k, G, axis=2) if G > 1 else k   # (B, Sk, H, D)
+        vg = jnp.repeat(v, G, axis=2) if G > 1 else v
+        fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+        out = ops.swa_attention(fold(q), fold(kg), fold(vg), window)
+        return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+    elif kernel != "einsum":
+        raise ValueError(f"unknown attention kernel {kernel!r}")
     scale = D ** -0.5
     qg = q.reshape(B, Sq, KV, G, D)
     k_pos = k_positions if k_positions is not None \
@@ -106,12 +126,18 @@ def init_attn_params(key, cfg, num_layers: int, dtype=jnp.float32):
     }
 
 
-def ring_decode_attend(p, x, *, cfg, ring_k, ring_v, pos, window: int):
+def ring_decode_attend(p, x, *, cfg, ring_k, ring_v, pos, window: int,
+                       kernel: str = "einsum"):
     """Decode attention against a ring-buffer cache of size ``window``.
 
     ring_k/v: (B, W, KV, D) with slot s holding the latest position
     p ≡ s (mod W); the new k/v are written at slot pos % W. Returns
     (out, (ring_k, ring_v)). O(window) HBM per step regardless of context.
+
+    ``kernel="pallas"`` runs the attend as the fused ring kernel
+    (``kernels.ops.ring_decode_attend``) — the slot->position mapping and
+    window mask happen inside the kernel, one HBM pass over the W slots.
+    Requires Sq == 1 (decode).
     """
     B, Sq, d = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -127,11 +153,20 @@ def ring_decode_attend(p, x, *, cfg, ring_k, ring_v, pos, window: int):
         ring_k, k.astype(ring_k.dtype), slot, axis=1)
     ring_v = jax.lax.dynamic_update_slice_in_dim(
         ring_v, v.astype(ring_v.dtype), slot, axis=1)
-    # absolute position per slot (negative = not yet written -> masked)
-    s_idx = jnp.arange(W)
-    k_pos = pos - jnp.mod(pos - s_idx, W)
-    out = gqa_attention(q, ring_k, ring_v, window=window, causal=True,
-                        q_offset=pos, k_positions=k_pos, q_chunk=1)
+    if kernel == "pallas":
+        if Sq != 1:
+            raise ValueError(f"kernel='pallas' requires Sq == 1, got {Sq}")
+        qr = q[:, 0].reshape(B, KV, H // KV, hd)
+        o = ops.ring_decode_attend(qr, ring_k, ring_v, pos, window)
+        out = o.reshape(B, Sq, H, hd)
+    elif kernel == "einsum":
+        # absolute position per slot (negative = not yet written -> masked)
+        s_idx = jnp.arange(W)
+        k_pos = pos - jnp.mod(pos - s_idx, W)
+        out = gqa_attention(q, ring_k, ring_v, window=window, causal=True,
+                            q_offset=pos, k_positions=k_pos, q_chunk=1)
+    else:
+        raise ValueError(f"unknown decode kernel {kernel!r}")
     out = jnp.einsum("bse,ef->bsf", out.reshape(B, Sq, H * hd),
                      p["wo"].astype(dt))
     return out, (ring_k, ring_v)
@@ -143,7 +178,8 @@ def positions_like(pos):
 
 def attn_forward(p, x, *, cfg, window, positions, causal=True,
                  cache=None, cache_index=None, q_chunk=1024,
-                 cache_slice_window: int = 0, k_extent: int = 0):
+                 cache_slice_window: int = 0, k_extent: int = 0,
+                 kernel: str = "einsum"):
     """One attention layer (params already per-layer, no leading L).
 
     cache: optional dict {"k": (B, S_max, KV, D), "v": ...} updated at
@@ -161,6 +197,12 @@ def attn_forward(p, x, *, cfg, window, positions, causal=True,
     Requires ``k_extent >= cache_index + Sq`` and is then bit-identical
     to the unsliced attend: the dropped positions are exactly the ones
     the ``k_len`` mask already zeroes.
+
+    ``kernel="pallas"`` (decode only: Sq == 1, cache present, no
+    ``cache_slice_window``) runs the attend as the fused ladder-bucketed
+    extent kernel (``kernels.ops.extent_decode_attend``): the static
+    ``k_extent`` bounds the HBM read via the BlockSpec and the causal
+    ``k_len`` mask is applied inside the kernel.
     """
     B, Sq, d = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -182,7 +224,19 @@ def attn_forward(p, x, *, cfg, window, positions, causal=True,
         cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
             cache["v"].dtype), idx, axis=1)
         w_slice = cache_slice_window
-        if w_slice and w_slice < ck.shape[1]:
+        if kernel == "pallas":
+            if Sq != 1 or w_slice:
+                raise ValueError(
+                    "kernel='pallas' requires decode (Sq == 1) without "
+                    "cache_slice_window")
+            S_max = ck.shape[1]
+            ext = k_extent if (k_extent and k_extent < S_max) else S_max
+            qr = q[:, 0].reshape(B, KV, H // KV, hd)
+            o = ops.extent_decode_attend(qr, ck, cv, idx, window, ext)
+            out = o.reshape(B, Sq, H, hd)
+        elif kernel != "einsum":
+            raise ValueError(f"unknown decode kernel {kernel!r}")
+        elif w_slice and w_slice < ck.shape[1]:
             start = jnp.clip(idx + Sq - w_slice, 0, ck.shape[1] - w_slice)
             ks = jax.lax.dynamic_slice_in_dim(ck, start, w_slice, axis=1)
             vs = jax.lax.dynamic_slice_in_dim(cv, start, w_slice, axis=1)

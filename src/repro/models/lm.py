@@ -73,7 +73,8 @@ def lm_head_weight(params, cfg: ModelConfig):
 
 def _layer(cfg: ModelConfig, lp, x, window, positions, mode: str,
            cache=None, pos=0, q_chunk: int = 1024, moe_ctx=None,
-           cache_slice_window: int = 0, k_extent: int = 0, seq_lens=None):
+           cache_slice_window: int = 0, k_extent: int = 0, seq_lens=None,
+           decode_kernel: str = "einsum"):
     """One layer. mode: 'train' | 'prefill' | 'decode'.
 
     Returns (x, aux_loss, new_cache).  ``seq_lens`` (B,) marks right-padded
@@ -86,6 +87,9 @@ def _layer(cfg: ModelConfig, lp, x, window, positions, mode: str,
     see ``init_ring_cache``); ``new_cache`` mirrors whichever layout came
     in. ``k_extent`` (static) bounds the K-extent a uniform-cache decode
     attends against (see ``attn_forward``).
+
+    ``decode_kernel``: "einsum" (jnp oracle) or "pallas" (fused decode
+    kernels — ring attend, extent attend, SSD step); decode mode only.
     """
     aux = jnp.float32(0.0)
     new_cache: dict = {}
@@ -94,7 +98,8 @@ def _layer(cfg: ModelConfig, lp, x, window, positions, mode: str,
         if mode == "decode":
             return ssm_mod.ssm_decode_step(lp["ssm"], h, cfg.ssm,
                                            cache["ssm_state"],
-                                           cache["conv_state"])
+                                           cache["conv_state"],
+                                           kernel=decode_kernel)
         return ssm_mod.ssm_forward(lp["ssm"], h, cfg.ssm,
                                    seq_lens=seq_lens)
 
@@ -106,15 +111,17 @@ def _layer(cfg: ModelConfig, lp, x, window, positions, mode: str,
         if "k_win" in cache:     # ring-buffer SWA decode
             a, (rk, rv) = attn_mod.ring_decode_attend(
                 lp["attn"], h, cfg=cfg, ring_k=cache["k_win"],
-                ring_v=cache["v_win"], pos=pos, window=window)
+                ring_v=cache["v_win"], pos=pos, window=window,
+                kernel=decode_kernel)
             return a, {"k_win": rk, "v_win": rv}
         attn_cache = {"k": cache["k"], "v": cache["v"]}
         idx = 0 if mode == "prefill" else pos
+        kern = decode_kernel if mode == "decode" else "einsum"
         return attn_mod.attn_forward(lp["attn"], h, cfg=cfg, window=window,
                                      positions=positions, cache=attn_cache,
                                      cache_index=idx, q_chunk=q_chunk,
                                      cache_slice_window=cache_slice_window,
-                                     k_extent=k_extent)
+                                     k_extent=k_extent, kernel=kern)
 
     if cfg.family == "ssm":
         h = rms_norm(x, lp["ln1"], cfg.norm_eps)
@@ -388,7 +395,8 @@ def _kind_runs(cfg: ModelConfig):
 
 
 def decode_step_grouped(params, cfg: ModelConfig, token, cache, pos,
-                        k_ext: int = 0, dtype=None):
+                        k_ext: int = 0, dtype=None,
+                        decode_kernel: str = "einsum"):
     """One decode step against an ``init_ring_cache`` layout, scanning
     contiguous same-kind layer runs (``_kind_runs``).
 
@@ -402,9 +410,14 @@ def decode_step_grouped(params, cfg: ModelConfig, token, cache, pos,
     batcher can vmap it over a slot batch without an L-times-unrolled
     trace.  Greedy tokens match ``decode_step`` (SWA softmax sums run in
     ring order, so floats may differ in the last ulp).
+
+    ``decode_kernel="pallas"`` fuses every decode attend/recurrence into
+    the Pallas decode kernels (see ``kernels/ops.py``) — same math, one
+    HBM pass per cache.
     """
     if cfg.family == "ssm":      # no attention: ring layout == uniform
-        return decode_step(params, cfg, token, cache, pos, dtype=dtype)
+        return decode_step(params, cfg, token, cache, pos, dtype=dtype,
+                           decode_kernel=decode_kernel)
     x = params["embed"][token][:, None, :]
     if dtype is not None:
         x = x.astype(dtype)
@@ -433,7 +446,8 @@ def decode_step_grouped(params, cfg: ModelConfig, token, cache, pos,
             lp_i, w_i, cl_i = xs
             x, _, nc = _layer(cfg, lp_i, x, w_i, positions, "decode",
                               cache=cl_i, pos=pos, q_chunk=1,
-                              k_extent=k_ext if _kind == "full" else 0)
+                              k_extent=k_ext if _kind == "full" else 0,
+                              decode_kernel=decode_kernel)
             return x, nc
 
         x, ncs = jax.lax.scan(body, x, (lp, win, cl))
@@ -464,14 +478,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 
 def _scan_cached(params, cfg, x, positions, cache, mode, pos, q_chunk,
-                 seq_lens=None):
+                 seq_lens=None, decode_kernel: str = "einsum"):
     win = windows(cfg)
 
     def body(carry, xs):
         x, aux = carry
         lp, w, cl = xs
         x, a, nc = _layer(cfg, lp, x, w, positions, mode, cache=cl, pos=pos,
-                          q_chunk=q_chunk, seq_lens=seq_lens)
+                          q_chunk=q_chunk, seq_lens=seq_lens,
+                          decode_kernel=decode_kernel)
         return (x, aux + a), nc
 
     (x, _), new_cache = jax.lax.scan(
@@ -514,7 +529,8 @@ def prefill(params, cfg: ModelConfig, tokens, cache,
 
 
 def decode_step(params, cfg: ModelConfig, token, cache, pos, dtype=None,
-                unroll: bool = False, window_slice: bool = False):
+                unroll: bool = False, window_slice: bool = False,
+                decode_kernel: str = "einsum"):
     """One autoregressive step. token: (B,) int32; pos: scalar position.
 
     Returns (logits (B, V), new_cache).
@@ -530,7 +546,8 @@ def decode_step(params, cfg: ModelConfig, token, cache, pos, dtype=None,
     positions = pos + jnp.zeros((1,), jnp.int32)
     if not unroll:
         x, cache = _scan_cached(params, cfg, x, positions, cache,
-                                "decode", pos=pos, q_chunk=1)
+                                "decode", pos=pos, q_chunk=1,
+                                decode_kernel=decode_kernel)
     else:
         new_cache = dict(cache)
         for i in range(cfg.num_layers):
@@ -540,7 +557,8 @@ def decode_step(params, cfg: ModelConfig, token, cache, pos, dtype=None,
             csw = w if (window_slice and w > 0) else 0
             x, _, nc = _layer(cfg, lp, x, jnp.int32(w), positions, "decode",
                               cache=cl, pos=pos, q_chunk=1,
-                              cache_slice_window=csw)
+                              cache_slice_window=csw,
+                              decode_kernel=decode_kernel)
             for k, v in nc.items():
                 new_cache[k] = new_cache[k].at[i].set(v.astype(
                     new_cache[k].dtype))

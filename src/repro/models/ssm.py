@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.models.common import fan_in_init, rms_norm
 from repro.types import SSMConfig
 
@@ -114,10 +115,15 @@ def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, h0=None):
 
 
 def ssm_forward(p, x, ssm: SSMConfig, state=None, conv_state=None,
-                d_model: int | None = None, seq_lens=None):
+                d_model: int | None = None, seq_lens=None,
+                kernel: str = "einsum"):
     """Full Mamba2 block (minus residual). x: (B, S, d).
 
     Training/prefill path. Returns (out, (ssm_state, conv_state)).
+
+    ``kernel="pallas"`` runs the SSD core through the chunked Pallas scan
+    (``kernels.ops.ssd_scan``); requires ``state is None`` (no carried-in
+    initial state — training/scoring, not chunked prefill).
 
     ``seq_lens`` (B,) int32 marks positions >= seq_lens[b] as right-padding
     (bucketed prefill): their dt is zeroed — an *exact* no-op on the state
@@ -165,7 +171,25 @@ def ssm_forward(p, x, ssm: SSMConfig, state=None, conv_state=None,
         dt = dt * active[..., None].astype(dt.dtype)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
 
-    y, h_final = ssd_chunked(xh, dt, A, Bm, Cm, ssm.chunk, h0=state)
+    if kernel == "pallas":
+        if state is not None:
+            raise ValueError("kernel='pallas' does not take an initial "
+                             "state; use the einsum path for chunked prefill")
+        Q = min(ssm.chunk, S)
+        padn = (Q - S % Q) % Q
+        if padn:   # dt=0 pad rows are exact state no-ops (see ssd_chunked)
+            xh_p = jnp.pad(xh, ((0, 0), (0, padn), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, padn), (0, 0)))
+            Bm_p = jnp.pad(Bm, ((0, 0), (0, padn), (0, 0)))
+            Cm_p = jnp.pad(Cm, ((0, 0), (0, padn), (0, 0)))
+            y, h_final = ops.ssd_scan(xh_p, dt_p, A, Bm_p, Cm_p, ssm.chunk)
+            y = y[:, :S]
+        else:
+            y, h_final = ops.ssd_scan(xh, dt, A, Bm, Cm, ssm.chunk)
+    elif kernel == "einsum":
+        y, h_final = ssd_chunked(xh, dt, A, Bm, Cm, ssm.chunk, h0=state)
+    else:
+        raise ValueError(f"unknown ssm kernel {kernel!r}")
     y = y + xh * p["D"][None, None, :, None].astype(y.dtype)
     y = y.reshape(B, S, di)
     y = rms_norm(y * jax.nn.silu(z), p["norm"])
@@ -173,9 +197,14 @@ def ssm_forward(p, x, ssm: SSMConfig, state=None, conv_state=None,
     return out.astype(x.dtype), (h_final, new_conv_state)
 
 
-def ssm_decode_step(p, x, ssm: SSMConfig, state, conv_state):
+def ssm_decode_step(p, x, ssm: SSMConfig, state, conv_state,
+                    kernel: str = "einsum"):
     """One-token recurrent step. x: (B, 1, d). state: (B, H, P, N),
-    conv_state: (B, d_conv-1, conv_dim). Returns (out, (state, conv_state))."""
+    conv_state: (B, d_conv-1, conv_dim). Returns (out, (state, conv_state)).
+
+    ``kernel="pallas"`` fuses the recurrence (decay + rank-1 update +
+    readout) into ``kernels.ops.ssd_decode_step`` — one HBM round trip
+    for the state, the update tensor never materialized."""
     B, _, d = x.shape
     di, nh, conv_dim = dims(d, ssm)
     N = ssm.d_state
@@ -196,12 +225,16 @@ def ssm_decode_step(p, x, ssm: SSMConfig, state, conv_state):
     dt = jax.nn.softplus(dt.astype(jnp.float32)
                          + p["dt_bias"].astype(jnp.float32))    # (B, H)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
-    dA = jnp.exp(dt * A[None, :])                               # (B, H)
-
-    # h <- dA * h + dt * x ⊗ B
-    upd = jnp.einsum("bh,bhp,bn->bhpn", dt.astype(xh.dtype), xh, Bm)
-    state = state * dA[..., None, None].astype(state.dtype) + upd
-    y = jnp.einsum("bhpn,bn->bhp", state, Cm)
+    if kernel == "pallas":
+        y, state = ops.ssd_decode_step(xh, dt, A, Bm, Cm, state)
+    elif kernel == "einsum":
+        dA = jnp.exp(dt * A[None, :])                           # (B, H)
+        # h <- dA * h + dt * x ⊗ B
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt.astype(xh.dtype), xh, Bm)
+        state = state * dA[..., None, None].astype(state.dtype) + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, Cm)
+    else:
+        raise ValueError(f"unknown decode kernel {kernel!r}")
     y = y + xh * p["D"][None, :, None].astype(y.dtype)
     y = y.reshape(B, di)
     y = rms_norm(y * jax.nn.silu(z), p["norm"])

@@ -67,6 +67,62 @@ def parse_collective_bytes(hlo_text: str) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Analytic decode-step byte models (single source of truth for the fused
+# Pallas decode kernels' CostEstimates and the fused-vs-einsum benches)
+# ---------------------------------------------------------------------------
+
+def attend_decode_bytes(n_ctx: int, kv_heads: int, q_heads: int,
+                        head_dim: int, *, dtype_bytes: int = 4,
+                        fused: bool = True) -> int:
+    """Modeled HBM bytes for ONE decode-attend step of one stream against
+    an ``n_ctx``-position cache (a W-slot ring or the first ``k_ext``
+    positions of a uniform cache — the model is the same).
+
+    Fused (Pallas) path: one pass over K and V plus the q/out vectors —
+    the score/probability tensors live in VMEM.  The einsum path
+    additionally materializes the (q_heads, n_ctx) f32 scores and
+    probabilities in HBM (one write + one read each), which is exactly
+    the traffic the kernel fuses away; ``kernels/swa_attention.py`` feeds
+    the fused number to ``pl.CostEstimate`` and
+    ``tests/test_roofline.py`` pins both against this function."""
+    if n_ctx < 1:
+        raise ValueError(f"n_ctx must be >= 1, got {n_ctx}")
+    qo = 2 * q_heads * head_dim * dtype_bytes            # q read + out write
+    cache = 2 * n_ctx * kv_heads * head_dim * dtype_bytes    # K + V, 1 pass
+    total = qo + cache
+    if not fused:
+        total += 4 * q_heads * n_ctx * 4    # scores + probs, write + read
+    return total
+
+
+def attend_decode_flops(n_ctx: int, q_heads: int, head_dim: int) -> int:
+    """MACs*2 for one decode-attend step: q·K plus p·V."""
+    return 2 * 2 * q_heads * head_dim * n_ctx
+
+
+def ssd_decode_bytes(heads: int, head_dim: int, d_state: int, *,
+                     dtype_bytes: int = 4, fused: bool = True) -> int:
+    """Modeled HBM bytes for ONE fused SSD decode step of one stream:
+    the (H, P, N) recurrent state read + written once, plus the x/dt/B/C/y
+    vectors.  The einsum path additionally materializes the (H, P, N)
+    ``dt·x⊗B`` update tensor in HBM (write + read) before the state
+    addition — the traffic ``kernels/ssd_scan.ssd_decode_step_pallas``
+    fuses away."""
+    state = 2 * heads * head_dim * d_state * dtype_bytes     # read + write
+    io = (2 * heads * head_dim + 2 * d_state + 2 * heads) * dtype_bytes
+    total = state + io
+    if not fused:
+        total += 2 * heads * head_dim * d_state * 4   # upd, write + read
+    return total
+
+
+def ssd_decode_flops(heads: int, head_dim: int, d_state: int) -> int:
+    """One SSD decode step: state decay + rank-1 update + C readout."""
+    return (3 * heads * head_dim * d_state
+            + 2 * heads * head_dim * d_state)
+
+
 @dataclass
 class RooflineReport:
     arch: str

@@ -90,3 +90,39 @@ def test_serving_ladder_steady_state_no_compiles(guard_rails,
     with guard_rails(), compile_budget(srv._jits, 0, exact=True):
         done2 = srv.run()                  # cumulative completed list
     assert [r.out for r in done2[len(done):]] == [r.out for r in done]
+
+
+def test_fused_decode_steady_state_no_compiles(guard_rails,
+                                               compile_budget, rng):
+    """PR-7 invariant: the fused-Pallas decode path obeys the same
+    compile discipline as the einsum oracle — warm decode programs are
+    bounded by the K-extent ladder, and a second identical stream runs
+    with zero new programs and zero implicit host transfers (the kernels
+    take traced pos/window operands, never compile keys or host syncs)."""
+    cfg = get_config("hymba-1.5b").reduced()
+    params = registry.init_params(jax.random.PRNGKey(8), cfg)
+    lengths, max_new = (3, 9, 21), (20, 12, 30)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lengths]
+
+    srv = ContinuousBatcher(params, cfg, max_slots=2, max_len=64,
+                            min_bucket=4, decode_mode="ring",
+                            decode_kernel="pallas")
+    for p, m in zip(prompts, max_new):
+        srv.submit(p, max_new=m)
+    done = srv.run()
+    assert 2 <= srv.decode_compiles <= len(srv.decode_buckets)
+
+    for p, m in zip(prompts, max_new):
+        srv.submit(p, max_new=m)
+    with guard_rails(), compile_budget(srv._jits, 0, exact=True):
+        done2 = srv.run()
+    assert [r.out for r in done2[len(done):]] == [r.out for r in done]
+
+    # the oracle kernel must produce the very same stream
+    srv_e = ContinuousBatcher(params, cfg, max_slots=2, max_len=64,
+                              min_bucket=4, decode_mode="ring",
+                              decode_kernel="einsum")
+    for p, m in zip(prompts, max_new):
+        srv_e.submit(p, max_new=m)
+    assert [r.out for r in srv_e.run()] == [r.out for r in done]

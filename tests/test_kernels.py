@@ -135,3 +135,179 @@ def test_ssd_chunked_matches_sequential(rng):
                                rtol=1e-3, atol=1e-3)
     np.testing.assert_allclose(np.asarray(hc), np.asarray(hs),
                                rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# fused decode kernels: ring attend / ladder-extent attend / SSD step
+# (parity oracle = the PR-5 einsum decode path in models/attention, ssm)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.ssd_scan import ssd_decode_step_pallas
+from repro.kernels.swa_attention import (extent_decode_attend_pallas,
+                                         ring_decode_attend_pallas)
+
+
+def _ring_oracle(q, k, v, pos, window):
+    """The einsum ring decode attend (gqa_attention + slot positions)."""
+    from repro.models.attention import gqa_attention
+    B, KV, G, D = q.shape
+    W = k.shape[1]
+    k_pos = pos - jnp.mod(pos - jnp.arange(W), W)
+    out = gqa_attention(q.reshape(B, 1, KV * G, D), k, v, window=window,
+                        causal=True, q_offset=pos, k_positions=k_pos,
+                        q_chunk=1)
+    return out.reshape(B, KV, G, D)
+
+
+def _extent_oracle(q, k, v, pos, window, k_ext):
+    """The einsum k_extent decode attend (slice + k_len mask)."""
+    from repro.models.attention import gqa_attention
+    B, KV, G, D = q.shape
+    out = gqa_attention(q.reshape(B, 1, KV * G, D),
+                        k[:, :k_ext], v[:, :k_ext], window=window,
+                        causal=True, q_offset=pos, k_len=pos + 1, q_chunk=1)
+    return out.reshape(B, KV, G, D)
+
+
+# odd windows, window 0 (full), W = 1, pos < W (short prompt) and pos >> W
+@pytest.mark.parametrize("W,pos,window", [
+    (16, 5, 7),        # pos < W: unwritten slots must be masked
+    (16, 40, 7),       # wrapped ring, odd window
+    (16, 40, 13),      # odd window > half the ring
+    (16, 3, 0),        # full attention over a partially written ring
+    (1, 0, 1),         # W = 1 edge: only the current token
+    (1, 25, 1),
+    (17, 33, 17),      # odd ring capacity
+])
+def test_ring_decode_attend_parity(W, pos, window, rng):
+    B, KV, G, D = 3, 2, 3, 16
+    q = jnp.asarray(rng.standard_normal((B, KV, G, D)) * 0.4, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, W, KV, D)) * 0.4, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, W, KV, D)), jnp.float32)
+    got = ring_decode_attend_pallas(q, k, v, jnp.int32(pos),
+                                    jnp.int32(window), interpret=True)
+    want = _ring_oracle(q, k, v, jnp.int32(pos), jnp.int32(window))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# k_ext at every rung of the pow-2 ladder (min_bucket 4 .. S_max 64)
+@pytest.mark.parametrize("k_ext", [4, 8, 16, 32, 64])
+@pytest.mark.parametrize("window", [0, 5])
+def test_extent_decode_attend_ladder_parity(k_ext, window, rng):
+    B, KV, G, D, S_max = 2, 2, 2, 16, 64
+    pos = k_ext - 1                    # deepest position the rung serves
+    q = jnp.asarray(rng.standard_normal((B, KV, G, D)) * 0.4, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S_max, KV, D)) * 0.4,
+                    jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S_max, KV, D)), jnp.float32)
+    got = extent_decode_attend_pallas(q, k, v, jnp.int32(pos),
+                                      jnp.int32(window), k_ext,
+                                      interpret=True)
+    want = _extent_oracle(q, k, v, jnp.int32(pos), jnp.int32(window), k_ext)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # shallow position on the same rung: pad slots are k_len-masked
+    got0 = extent_decode_attend_pallas(q, k, v, jnp.int32(0),
+                                       jnp.int32(window), k_ext,
+                                       interpret=True)
+    want0 = _extent_oracle(q, k, v, jnp.int32(0), jnp.int32(window), k_ext)
+    np.testing.assert_allclose(np.asarray(got0), np.asarray(want0),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_extent_decode_attend_rejects_bad_extent(rng):
+    q = jnp.zeros((1, 1, 1, 8), jnp.float32)
+    k = jnp.zeros((1, 16, 1, 8), jnp.float32)
+    with pytest.raises(ValueError):
+        extent_decode_attend_pallas(q, k, k, jnp.int32(0), jnp.int32(0), 0)
+    with pytest.raises(ValueError):
+        extent_decode_attend_pallas(q, k, k, jnp.int32(0), jnp.int32(0), 17)
+
+
+def test_ssd_decode_step_parity(rng):
+    """Fused step == the dA/upd/state/y einsum block, including dt=0
+    rows (ladder pad steps) being exact state no-ops."""
+    B, H, P, N = 3, 4, 8, 16
+    xh = jnp.asarray(rng.standard_normal((B, H, P)), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.standard_normal((B, H)),
+                                     jnp.float32))
+    dt = dt.at[1].set(0.0)            # pad-row: exact no-op on the state
+    A = -jnp.exp(jnp.asarray(rng.standard_normal(H) * 0.3, jnp.float32))
+    Bm = jnp.asarray(rng.standard_normal((B, N)) * 0.5, jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, N)) * 0.5, jnp.float32)
+    st = jnp.asarray(rng.standard_normal((B, H, P, N)), jnp.float32)
+
+    dA = jnp.exp(dt * A[None, :])
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt.astype(xh.dtype), xh, Bm)
+    st_want = st * dA[..., None, None].astype(st.dtype) + upd
+    y_want = jnp.einsum("bhpn,bn->bhp", st_want, Cm)
+
+    y_got, st_got = ssd_decode_step_pallas(xh, dt, A, Bm, Cm, st,
+                                           interpret=True)
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_got), np.asarray(st_want),
+                               rtol=1e-5, atol=1e-5)
+    # the dt=0 row's state is untouched bit-for-bit
+    assert bool(jnp.all(st_got[1] == st[1]))
+
+
+def test_ssd_decode_step_multi_step_vs_sequential(rng):
+    """Iterating the fused step tracks the O(S) sequential reference."""
+    B, S, H, P, N = 2, 24, 2, 8, 8
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.standard_normal((B, S, H)),
+                                     jnp.float32))
+    A = -jnp.exp(jnp.asarray(rng.standard_normal(H) * 0.3, jnp.float32))
+    Bm = jnp.asarray(rng.standard_normal((B, S, N)) * 0.5, jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, N)) * 0.5, jnp.float32)
+    ys_ref, h_ref = ops.ssd_sequential_ref(x, dt, A, Bm, Cm)
+    h = jnp.zeros((B, H, P, N), jnp.float32)
+    ys = []
+    for t in range(S):
+        y, h = ssd_decode_step_pallas(x[:, t], dt[:, t], A, Bm[:, t],
+                                      Cm[:, t], h, interpret=True)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(ys_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# family-level fused-vs-einsum decode parity (all five LM families)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["h2o-danube-3-4b", "gemma3-12b",
+                                  "llama4-scout-17b-a16e", "mamba2-130m",
+                                  "hymba-1.5b"])
+def test_decode_step_grouped_kernel_parity(arch, rng):
+    """One fused decode step == one einsum decode step — same logits to
+    fp32 tolerance and the same greedy token, from the same prefilled
+    ring cache, for every LM family."""
+    from repro.configs import get_config
+    from repro.models import lm, registry
+    cfg = get_config(arch).reduced()
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    B, S_max, P = 2, 32, 9
+    cache = registry.init_cache(cfg, B, S_max, jnp.float32)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)
+    logits, cache = registry.prefill(params, cfg, {"tokens": toks}, cache,
+                                     q_chunk=P)
+    ring = lm.to_ring_cache(cfg, cache, P)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    outs = {}
+    for kern in ("einsum", "pallas"):
+        outs[kern] = registry.decode_step_grouped(
+            params, cfg, tok, dict(ring), jnp.int32(P), k_ext=16,
+            decode_kernel=kern)
+    lg_e, lg_p = outs["einsum"][0], outs["pallas"][0]
+    np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_e),
+                               rtol=2e-5, atol=2e-5)
+    assert jnp.array_equal(jnp.argmax(lg_p, -1), jnp.argmax(lg_e, -1))
+    for key in outs["einsum"][1]:
+        np.testing.assert_allclose(
+            np.asarray(outs["pallas"][1][key], np.float32),
+            np.asarray(outs["einsum"][1][key], np.float32),
+            rtol=2e-5, atol=2e-5, err_msg=key)

@@ -113,3 +113,89 @@ def test_swa_rows_are_probability_weighted(S, w, seed):
     vmin, vmax = float(jnp.min(v)), float(jnp.max(v))
     assert float(jnp.min(out)) >= vmin - 1e-4
     assert float(jnp.max(out)) <= vmax + 1e-4
+
+
+@given(W=st.integers(1, 24), pos=st.integers(0, 60),
+       window=st.integers(0, 30), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_ring_decode_kernel_matches_einsum(W, pos, window, seed):
+    """Fused ring decode attend == the einsum oracle for arbitrary
+    (ring size, position, window) — including W = 1, odd windows, pos < W
+    (partially written rings) and window 0 (full attention)."""
+    from repro.kernels.swa_attention import ring_decode_attend_pallas
+    from repro.models.attention import gqa_attention
+    r = np.random.default_rng(seed)
+    B, KV, G, D = 2, 2, 2, 8
+    q = jnp.asarray(r.standard_normal((B, KV, G, D)) * 0.4, jnp.float32)
+    k = jnp.asarray(r.standard_normal((B, W, KV, D)) * 0.4, jnp.float32)
+    v = jnp.asarray(r.standard_normal((B, W, KV, D)), jnp.float32)
+    got = ring_decode_attend_pallas(q, k, v, jnp.int32(pos),
+                                    jnp.int32(window), interpret=True)
+    k_pos = pos - jnp.mod(pos - jnp.arange(W), W)
+    want = gqa_attention(q.reshape(B, 1, KV * G, D), k, v,
+                         window=jnp.int32(window), causal=True,
+                         q_offset=pos, k_positions=k_pos, q_chunk=1
+                         ).reshape(B, KV, G, D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(log2_ext=st.integers(0, 6), rel_pos=st.floats(0.0, 1.0),
+       window=st.integers(0, 40), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_extent_decode_kernel_matches_einsum(log2_ext, rel_pos, window,
+                                             seed):
+    """Fused ladder-extent decode attend == the einsum slice + k_len-mask
+    oracle at every pow-2 rung and any in-rung position."""
+    from repro.kernels.swa_attention import extent_decode_attend_pallas
+    from repro.models.attention import gqa_attention
+    r = np.random.default_rng(seed)
+    B, KV, G, D, S_max = 2, 2, 2, 8, 64
+    k_ext = 2 ** log2_ext
+    pos = min(int(rel_pos * (k_ext - 1)), k_ext - 1) if k_ext > 1 else 0
+    q = jnp.asarray(r.standard_normal((B, KV, G, D)) * 0.4, jnp.float32)
+    k = jnp.asarray(r.standard_normal((B, S_max, KV, D)) * 0.4, jnp.float32)
+    v = jnp.asarray(r.standard_normal((B, S_max, KV, D)), jnp.float32)
+    got = extent_decode_attend_pallas(q, k, v, jnp.int32(pos),
+                                      jnp.int32(window), k_ext,
+                                      interpret=True)
+    want = gqa_attention(q.reshape(B, 1, KV * G, D),
+                         k[:, :k_ext], v[:, :k_ext],
+                         window=jnp.int32(window), causal=True,
+                         q_offset=pos, k_len=pos + 1, q_chunk=1
+                         ).reshape(B, KV, G, D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(H=st.integers(1, 4), P=st.integers(1, 16), N=st.integers(1, 16),
+       n_pad=st.integers(0, 2), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_ssd_decode_kernel_matches_einsum(H, P, N, n_pad, seed):
+    """Fused SSD decode step == the einsum recurrence block; rows with
+    dt = 0 (ladder pad steps) leave the state bit-identical."""
+    from repro.kernels.ssd_scan import ssd_decode_step_pallas
+    r = np.random.default_rng(seed)
+    B = 3
+    xh = jnp.asarray(r.standard_normal((B, H, P)), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(r.standard_normal((B, H)),
+                                     jnp.float32))
+    pad_rows = list(range(min(n_pad, B)))
+    for row in pad_rows:
+        dt = dt.at[row].set(0.0)
+    A = -jnp.exp(jnp.asarray(r.standard_normal(H) * 0.3, jnp.float32))
+    Bm = jnp.asarray(r.standard_normal((B, N)) * 0.5, jnp.float32)
+    Cm = jnp.asarray(r.standard_normal((B, N)) * 0.5, jnp.float32)
+    st_in = jnp.asarray(r.standard_normal((B, H, P, N)), jnp.float32)
+    dA = jnp.exp(dt * A[None, :])
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bm)
+    st_want = st_in * dA[..., None, None] + upd
+    y_want = jnp.einsum("bhpn,bn->bhp", st_want, Cm)
+    y_got, st_got = ssd_decode_step_pallas(xh, dt, A, Bm, Cm, st_in,
+                                           interpret=True)
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_got), np.asarray(st_want),
+                               rtol=1e-5, atol=1e-5)
+    for row in pad_rows:
+        assert bool(jnp.all(st_got[row] == st_in[row]))

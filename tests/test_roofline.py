@@ -91,3 +91,76 @@ def test_report_terms_and_dominance():
     assert rep.mfu == pytest.approx(0.125)
     d = rep.to_dict()
     assert d["dominant"] == "memory"
+
+
+# ---------------------------------------------------------------------------
+# Analytic decode-step byte models (PR 7): the fused Pallas kernels'
+# CostEstimates must be THE model in analysis.py, and the fused model must
+# be strictly cheaper than the einsum path it replaces.
+# ---------------------------------------------------------------------------
+
+from repro.roofline.analysis import (attend_decode_bytes, attend_decode_flops,
+                                     ssd_decode_bytes, ssd_decode_flops)
+
+
+def test_attend_decode_bytes_fused_below_einsum():
+    for n_ctx in (1, 4, 64, 512):
+        for kv, g in ((1, 1), (2, 4), (8, 1)):
+            fused = attend_decode_bytes(n_ctx, kv, kv * g, 64)
+            unfused = attend_decode_bytes(n_ctx, kv, kv * g, 64, fused=False)
+            assert fused < unfused
+            # the gap is exactly the scores+probs HBM round trips
+            assert unfused - fused == 4 * (kv * g) * n_ctx * 4
+    with pytest.raises(ValueError):
+        attend_decode_bytes(0, 1, 1, 64)
+
+
+def test_ssd_decode_bytes_fused_below_einsum():
+    for h, p, n in ((1, 1, 1), (8, 64, 128), (3, 5, 7)):
+        fused = ssd_decode_bytes(h, p, n)
+        unfused = ssd_decode_bytes(h, p, n, fused=False)
+        assert fused < unfused
+        # the gap is exactly the materialized update tensor round trip
+        assert unfused - fused == 2 * h * p * n * 4
+
+
+def test_attend_kernel_cost_estimate_matches_model():
+    """The CostEstimate the decode-attend kernels hand to XLA is the
+    analysis.py fused model, per stream, not an ad-hoc recount."""
+    pl = pytest.importorskip("jax.experimental.pallas")
+    if not hasattr(pl, "CostEstimate"):
+        pytest.skip("jax too old for pl.CostEstimate")
+    from repro.kernels.swa_attention import _cost_kwargs
+    B, n_ctx, kv, g, d = 3, 16, 2, 4, 8
+    est = _cost_kwargs(B, n_ctx, kv, g, d, jnp.float32)["cost_estimate"]
+    assert est.bytes_accessed == B * attend_decode_bytes(n_ctx, kv, kv * g, d)
+    assert est.flops == B * attend_decode_flops(n_ctx, kv * g, d)
+
+
+def test_ssd_kernel_cost_estimate_matches_model():
+    pl = pytest.importorskip("jax.experimental.pallas")
+    if not hasattr(pl, "CostEstimate"):
+        pytest.skip("jax too old for pl.CostEstimate")
+    from repro.kernels.ssd_scan import ssd_decode_step_pallas
+    captured = {}
+    orig = pl.pallas_call
+
+    def spy(*args, **kw):
+        captured.update(kw)
+        return orig(*args, **kw)
+
+    B, H, P, N = 2, 3, 4, 5
+    f32 = jnp.float32
+    args = (jnp.ones((B, H, P), f32), jnp.ones((B, H), f32),
+            jnp.ones((H,), f32), jnp.ones((B, N), f32),
+            jnp.ones((B, N), f32), jnp.ones((B, H, P, N), f32))
+    import repro.kernels.ssd_scan as mod
+    old = mod.pl.pallas_call
+    mod.pl.pallas_call = spy
+    try:
+        ssd_decode_step_pallas(*args, interpret=True)
+    finally:
+        mod.pl.pallas_call = old
+    est = captured["cost_estimate"]
+    assert est.bytes_accessed == B * ssd_decode_bytes(H, P, N)
+    assert est.flops == B * ssd_decode_flops(H, P, N)

@@ -271,3 +271,69 @@ def test_eos_early_stop(rng):
     done = srv.run()
     assert done[0].out[-1] == eos
     assert len(done[0].out) <= 8
+
+
+@pytest.mark.parametrize("decode_mode", ["ring", "uniform"])
+@pytest.mark.parametrize("decode_kernel", ["pallas", "einsum"])
+def test_prompt_shorter_than_window_parity(decode_mode, decode_kernel, rng):
+    """Prompts shorter than the ring window (P < W) leave never-written
+    slots — install must keep them inert. Greedy parity with
+    ``generate_single`` in both decode modes and both decode kernels,
+    down to a single-token prompt."""
+    cfg = get_config("gemma3-12b").reduced()      # SWA: W = min(64, max_len)
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (1, 3, 13)]               # all < W = 32
+    max_new = [4, 6, 3]
+    srv = ContinuousBatcher(params, cfg, max_slots=2, max_len=32,
+                            min_bucket=4, decode_mode=decode_mode,
+                            decode_kernel=decode_kernel)
+    for p, m in zip(prompts, max_new):
+        srv.submit(p, max_new=m)
+    done = srv.run()
+    assert len(done) == len(prompts)
+    for req, p, m in zip(done, prompts, max_new):
+        assert req.out == generate_single(params, cfg, p, m, max_len=32), \
+            (decode_mode, decode_kernel, req.rid)
+
+
+def test_window_one_ring_parity(rng):
+    """W = 1 edge: each SWA layer's ring holds only the current token."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("gemma3-12b").reduced(),
+                              sliding_window=1)
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (1, 5)]
+    srv = ContinuousBatcher(params, cfg, max_slots=2, max_len=32,
+                            min_bucket=4)
+    for p in prompts:
+        srv.submit(p, max_new=4)
+    done = srv.run()
+    assert len(done) == 2
+    for req, p in zip(done, prompts):
+        assert req.out == generate_single(params, cfg, p, 4, max_len=32)
+
+
+def test_ring_install_short_prompt_slots(rng):
+    """Regression (PR 7): installing a P < W prompt used to leave the
+    never-written ring slots holding a clipped gather of position 0;
+    they must be exactly zero (decode masks them either way, but the
+    cache state must not depend on install history)."""
+    from repro.models import lm
+    cfg = get_config("gemma3-12b").reduced()
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    P = 3
+    srv = ContinuousBatcher(params, cfg, max_slots=1, max_len=32,
+                            min_bucket=4)
+    srv.submit(rng.integers(0, cfg.vocab_size, P).astype(np.int32),
+               max_new=2)
+    srv._admit()                                   # install, no decode yet
+    W = srv.cache["k_win"].shape[2]
+    assert P < W
+    unwritten = np.asarray(lm.ring_source_positions(P - 1, W)).ravel() < 0
+    assert unwritten.any()
+    for key in ("k_win", "v_win"):
+        buf = np.asarray(srv.cache[key])[:, 0]     # (Lw, W, kv, hd), slot 0
+        assert (buf[:, unwritten] == 0).all(), key
+        assert np.abs(buf[:, ~unwritten]).max() > 0, key
