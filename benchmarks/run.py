@@ -18,10 +18,12 @@ from benchmarks.roofline_table import roofline_table
 from benchmarks.kernel_bench import kernel_bench
 from benchmarks.fed_engine_bench import fed_engine_bench
 from benchmarks.serving_bench import serving_bench
+from benchmarks.distill_bench import distill_bench
 
 ALL = {
     "fedengine": fed_engine_bench,
     "serving": serving_bench,
+    "distill": distill_bench,
     "table1": tables.table1_kd_tas,
     "table2": tables.table2_stage_times,
     "table3": tables.table3_accuracy,

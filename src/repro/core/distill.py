@@ -1,13 +1,35 @@
-"""Knowledge distillation with teaching assistants (paper §III-B, §V-A).
+"""Knowledge distillation with teaching assistants (paper §III-B, §V-A),
+rebuilt as batched fleet workloads on the compiled-engine substrate.
 
-L = α·L_cls + (1-α)·L_KD, with L_KD the MSE between teacher and student
-logits (the paper's choice — *not* temperature-softened KL). In TA stages the
-classification targets are the teacher's hard predictions ("the ground truth
-[is] the output of the teacher for the input x").
+L = α·L_cls + (1-α)·L_KD, with L_KD the (temperature-scaled) MSE between
+teacher and student logits (the paper's choice at T=1 — *not* softened KL).
+In TA stages the classification targets are the teacher's hard predictions
+("the ground truth [is] the output of the teacher for the input x").
 
-``run_chain`` executes the full teacher → TA* → student pipeline over any
-models in the registry; the hot loss is available both as pure jnp and as the
-fused Pallas kernel (kernels/kd_loss.py) via ``use_kernel=True``.
+Three engines, all routing every jitted program through a shared
+``compile_cache.JitCache`` (the PR-1/2 discipline; no stray ``jax.jit``):
+
+``DistillEngine``
+    One KD *epoch* — teacher forward + student forward/backward per step —
+    as a single ``lax.scan`` program over a pre-stacked batch pytree. The
+    fused Pallas KD kernel is the default loss (``kd_kernel="pallas"``),
+    with the eager jnp implementation kept as a parity oracle behind
+    ``kd_kernel="eager"`` (mirroring serving's ``decode_kernel=``).
+
+``ScratchRun``
+    The CE-only baseline/pretrain epoch (paper's "train from scratch").
+
+``CodistillFleet``
+    Codistillation across heterogeneous capacities (PAPERS.md: Knowledge
+    Codistillation): m peers train on a shared probe stream, each
+    distilling from the mean of its peers' round-start logits. Peers
+    sharing a ModelConfig stack their params and run as ONE vmapped
+    masked-scan program with per-member iteration budgets — the padded-scan
+    engine pattern — so compile count scales with distinct architectures,
+    not member count.
+
+``run_chain`` executes the full teacher → TA* → student pipeline;
+``launch/pipeline.py`` chains it into federated fine-tuning.
 """
 from __future__ import annotations
 
@@ -21,23 +43,47 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import fed_engine
+from repro.core.compile_cache import JitCache as _JitCache
+from repro.kernels import ops, ref
 from repro.models import registry
-from repro.models.common import cross_entropy
 from repro.optim import sgd
 from repro.types import DistillConfig, ModelConfig
 
+KD_KERNELS = ("pallas", "eager")
+
 
 def kd_loss(student_logits, teacher_logits, labels, alpha: float,
-            use_kernel: bool = False):
-    """α·CE(student, labels) + (1-α)·MSE(student, teacher) (paper §III-B)."""
-    if use_kernel:
-        from repro.kernels import ops
-        return ops.kd_loss(student_logits, teacher_logits, labels, alpha)
-    s = student_logits.astype(jnp.float32)
-    t = teacher_logits.astype(jnp.float32)
-    l_kd = jnp.mean(jnp.sum(jnp.square(s - t), axis=-1))
-    l_cls = cross_entropy(s, labels)
-    return alpha * l_cls + (1.0 - alpha) * l_kd
+            temperature: float = 1.0, kd_kernel: str = "pallas",
+            valid=None):
+    """Mean KD loss over all (valid) rows: α·CE + (1-α)·Σ((s-t)/T)².
+
+    ``kd_kernel="pallas"`` (default) runs the fused single-pass kernel with
+    its analytic backward; ``"eager"`` is the pure-jnp parity oracle.
+    Leading axes flatten to rows (LM: B·S, resnet: B). ``valid`` masks rows
+    out of both the sum and the denominator (the batched engines' padding).
+    """
+    if kd_kernel not in KD_KERNELS:
+        raise ValueError(
+            f"kd_kernel must be one of {KD_KERNELS}, got {kd_kernel!r}")
+    R = 1
+    for dim in student_logits.shape[:-1]:
+        R *= dim
+    V = student_logits.shape[-1]
+    s = student_logits.reshape(R, V)
+    t = teacher_logits.reshape(R, V)
+    lab = labels.reshape(R)
+    v = None if valid is None else valid.reshape(R)
+    if kd_kernel == "pallas":
+        per_row = ops.kd_loss_rows(s, t, lab, alpha,
+                                   temperature=temperature, valid=v)
+    else:
+        per_row = ref.kd_loss_ref(s, t, lab, alpha,
+                                  temperature=temperature, valid=v)
+    if v is None:
+        return jnp.mean(per_row)
+    denom = jnp.maximum(jnp.sum(v.astype(jnp.float32)), 1.0)
+    return jnp.sum(per_row) / denom
 
 
 def clip_by_global_norm(grads, max_norm: float):
@@ -49,52 +95,191 @@ def clip_by_global_norm(grads, max_norm: float):
                                   grads)
 
 
-def make_distill_step(student_cfg: ModelConfig, dcfg: DistillConfig,
-                      use_kernel: bool = False,
-                      use_teacher_targets: bool = True,
-                      clip_norm: float = 1.0):
-    """Returns a jitted step: (params, opt_state, batch, teacher_logits) ->
-    (params, opt_state, loss). Teacher logits are *inputs* (precomputed by a
-    forward pass of the frozen teacher), matching the paper's pipeline where
-    KD cost = teacher fwd + student fwd/bwd. Gradients are clipped by global
-    norm (the raw MSE-on-logits term is scale-unbounded)."""
-    opt = sgd(dcfg.lr, dcfg.momentum, dcfg.weight_decay)
+def _check_widths(a: ModelConfig, b: ModelConfig):
+    if registry.logit_width(a) != registry.logit_width(b):
+        raise ValueError(
+            f"KD needs equal logit width: {a.name} vs {b.name}")
 
-    def loss_fn(params, batch, teacher_logits):
-        logits = registry.logits_fn(params, student_cfg, batch)
+
+# ---------------------------------------------------------------------------
+# Engines
+# ---------------------------------------------------------------------------
+
+class DistillEngine:
+    """Scan-compiled KD: one epoch of teacher-fwd + student-step per call.
+
+    ``epoch(teacher_params, params, opt_state, stacked)`` runs H KD steps
+    as one program over a batch pytree with leading axis H (see
+    ``repro.data.stack_batches``) and returns ``(params, opt_state,
+    losses (H,))`` — the only host sync a caller pays is reading the loss
+    vector. Teacher logits are recomputed inside the scan body (the
+    paper's cost model: KD step = teacher fwd + student fwd/bwd), under
+    ``stop_gradient``. ``step(...)`` is the single-step entry the epoch
+    program must match (the per-step oracle, also the bench's dispatch-
+    bound baseline). Gradients are clipped by global norm (the raw
+    MSE-on-logits term is scale-unbounded).
+    """
+
+    def __init__(self, teacher_cfg: ModelConfig, student_cfg: ModelConfig,
+                 dcfg: DistillConfig, kd_kernel: str = "pallas",
+                 use_teacher_targets: bool = True, clip_norm: float = 1.0):
+        if kd_kernel not in KD_KERNELS:
+            raise ValueError(
+                f"kd_kernel must be one of {KD_KERNELS}, got {kd_kernel!r}")
+        _check_widths(teacher_cfg, student_cfg)
+        self.teacher_cfg = teacher_cfg
+        self.student_cfg = student_cfg
+        self.dcfg = dcfg
+        self.kd_kernel = kd_kernel
+        self.use_teacher_targets = use_teacher_targets
+        self.clip_norm = clip_norm
+        self.opt = sgd(dcfg.lr, dcfg.momentum, dcfg.weight_decay)
+        self._jits = _JitCache()
+
+    # -- pure (unjitted) core --------------------------------------------
+    def _loss(self, params, batch, teacher_logits):
+        logits = registry.logits_fn(params, self.student_cfg, batch)
         labels = batch["labels"]
-        if use_teacher_targets:
+        if self.use_teacher_targets:
             labels = jnp.argmax(teacher_logits, axis=-1)
-        return kd_loss(logits, teacher_logits, labels, dcfg.alpha,
-                       use_kernel=use_kernel)
+        return kd_loss(logits, teacher_logits, labels, self.dcfg.alpha,
+                       temperature=self.dcfg.temperature,
+                       kd_kernel=self.kd_kernel)
 
-    @jax.jit
-    def step(params, opt_state, batch, teacher_logits):
-        loss, grads = jax.value_and_grad(loss_fn)(params, batch,
-                                                  teacher_logits)
-        if clip_norm:
-            grads = clip_by_global_norm(grads, clip_norm)
-        params, opt_state = opt.update(grads, opt_state, params)
+    def _step(self, teacher_params, params, opt_state, batch):
+        t_logits = jax.lax.stop_gradient(
+            registry.logits_fn(teacher_params, self.teacher_cfg, batch))
+        loss, grads = jax.value_and_grad(self._loss)(params, batch, t_logits)
+        if self.clip_norm:
+            grads = clip_by_global_norm(grads, self.clip_norm)
+        params, opt_state = self.opt.update(grads, opt_state, params)
         return params, opt_state, loss
 
-    return step, opt
+    def _epoch(self, teacher_params, params, opt_state, stacked):
+        def body(carry, batch):
+            params, opt_state = carry
+            params, opt_state, loss = self._step(
+                teacher_params, params, opt_state, batch)
+            return (params, opt_state), loss
+
+        (params, opt_state), losses = jax.lax.scan(
+            body, (params, opt_state), stacked)
+        return params, opt_state, losses
+
+    @property
+    def num_compiled(self) -> int:
+        """Distinct traced programs — one per (H, batch-shape) epoch
+        shape plus one per step shape if ``step`` was used."""
+        return self._jits.num_compiled
+
+    def epoch(self, teacher_params, params, opt_state, stacked,
+              donate: bool = False):
+        """``donate=True`` hands the batch stack's buffers to XLA — only
+        safe when the caller built the stack for this call alone."""
+        return self._jits.call(
+            "epoch", self._epoch, (3,) if donate else (),
+            (teacher_params, params, opt_state, stacked))
+
+    def step(self, teacher_params, params, opt_state, batch):
+        return self._jits.call(
+            "step", self._step, (),
+            (teacher_params, params, opt_state, batch))
 
 
-def make_scratch_step(cfg: ModelConfig, dcfg: DistillConfig):
-    """Plain CE training step (the paper's 'train from scratch' baseline)."""
-    opt = sgd(dcfg.lr, dcfg.momentum, dcfg.weight_decay)
+class ScratchRun:
+    """CE-only scan epoch: the paper's 'train from scratch' baseline and
+    the server-side teacher pretrain. Same wire format as DistillEngine:
+    ``epoch(params, opt_state, stacked)`` -> (params, opt_state, losses)."""
 
-    @jax.jit
-    def step(params, opt_state, batch):
+    def __init__(self, cfg: ModelConfig, dcfg: DistillConfig,
+                 clip_norm: float = 1.0):
+        self.cfg = cfg
+        self.dcfg = dcfg
+        self.clip_norm = clip_norm
+        self.opt = sgd(dcfg.lr, dcfg.momentum, dcfg.weight_decay)
+        self._jits = _JitCache()
+
+    def _step(self, params, opt_state, batch):
         def loss_fn(p):
-            return registry.loss_fn(p, cfg, batch, remat=False)[0]
+            return registry.loss_fn(p, self.cfg, batch, remat=False)[0]
+
         loss, grads = jax.value_and_grad(loss_fn)(params)
-        grads = clip_by_global_norm(grads, 1.0)
-        params, opt_state = opt.update(grads, opt_state, params)
+        if self.clip_norm:
+            grads = clip_by_global_norm(grads, self.clip_norm)
+        params, opt_state = self.opt.update(grads, opt_state, params)
         return params, opt_state, loss
 
-    return step, opt
+    def _epoch(self, params, opt_state, stacked):
+        def body(carry, batch):
+            params, opt_state = carry
+            params, opt_state, loss = self._step(params, opt_state, batch)
+            return (params, opt_state), loss
 
+        (params, opt_state), losses = jax.lax.scan(
+            body, (params, opt_state), stacked)
+        return params, opt_state, losses
+
+    @property
+    def num_compiled(self) -> int:
+        return self._jits.num_compiled
+
+    def epoch(self, params, opt_state, stacked, donate: bool = False):
+        return self._jits.call(
+            "epoch", self._epoch, (2,) if donate else (),
+            (params, opt_state, stacked))
+
+
+def make_distill_engine(teacher_cfg: ModelConfig, student_cfg: ModelConfig,
+                        dcfg: DistillConfig, kd_kernel: str = "pallas",
+                        use_teacher_targets: bool = True,
+                        clip_norm: float = 1.0) -> DistillEngine:
+    """Memoized on the full program identity (both configs, the distill
+    config, the kernel choice) through the fed engine's shared FIFO cache,
+    so repeated pipeline runs reuse compiled epochs."""
+    key = ("distill", teacher_cfg, student_cfg, dcfg, kd_kernel,
+           use_teacher_targets, clip_norm)
+    return fed_engine.cached_engine(
+        key, lambda: DistillEngine(teacher_cfg, student_cfg, dcfg,
+                                   kd_kernel=kd_kernel,
+                                   use_teacher_targets=use_teacher_targets,
+                                   clip_norm=clip_norm))
+
+
+def make_scratch_run(cfg: ModelConfig, dcfg: DistillConfig,
+                     clip_norm: float = 1.0) -> ScratchRun:
+    key = ("scratch", cfg, dcfg, clip_norm)
+    return fed_engine.cached_engine(
+        key, lambda: ScratchRun(cfg, dcfg, clip_norm=clip_norm))
+
+
+# ---------------------------------------------------------------------------
+# Evaluation (shared jit pool — no stray jits)
+# ---------------------------------------------------------------------------
+
+_JITS = _JitCache()
+
+
+def _predict(params, batch, *, cfg: ModelConfig):
+    return jnp.argmax(registry.logits_fn(params, cfg, batch), axis=-1)
+
+
+def evaluate(params, cfg: ModelConfig, batches) -> float:
+    """Top-1 accuracy over batches (per-clip for resnet3d, per-token for
+    LM families). Predictions compute on device; one explicit transfer
+    per batch reads them back."""
+    hits = tot = 0
+    for batch in batches:
+        pred = _JITS.call(("eval", cfg), functools.partial(_predict, cfg=cfg),
+                          (), (params, batch))
+        pred = np.asarray(jax.device_get(pred))
+        hits += int(np.sum(pred == np.asarray(batch["labels"])))
+        tot += int(np.prod(np.shape(batch["labels"])))
+    return hits / max(tot, 1)
+
+
+# ---------------------------------------------------------------------------
+# Chain driver (teacher -> TA* -> student)
+# ---------------------------------------------------------------------------
 
 @dataclass
 class StageResult:
@@ -105,68 +290,289 @@ class StageResult:
     wall_time_s: float = 0.0
     flops_fwd_teacher: float = 0.0
     flops_step_student: float = 0.0
+    compiles: int = 0
 
 
-def evaluate(params, cfg: ModelConfig, batches) -> float:
-    """Top-1 accuracy over batches (per-clip for resnet3d)."""
-    hits = tot = 0
-    logits_j = jax.jit(functools.partial(registry.logits_fn, cfg=cfg))
-    for batch in batches:
-        logits = logits_j(params=params, batch=batch)
-        pred = jnp.argmax(logits, axis=-1)
-        hits += int(jnp.sum(pred == batch["labels"]))
-        tot += int(np.prod(batch["labels"].shape))
-    return hits / max(tot, 1)
+def _run_epochs(run_epoch, it, total_steps: int, epoch_len: int):
+    """Drive scan epochs over an iterator: stack up to ``epoch_len``
+    batches, run one program, one host sync for the loss vector. Returns
+    the collected per-step losses (list of float)."""
+    from repro.data import stack_batches
+    losses: list = []
+    remaining = total_steps
+    while remaining > 0:
+        stacked = stack_batches(it, limit=min(epoch_len, remaining))
+        if stacked is None:
+            break                      # iterator exhausted early
+        h = int(jax.tree_util.tree_leaves(stacked)[0].shape[0])
+        remaining -= h
+        ls = run_epoch(stacked)
+        losses.extend(float(x) for x in np.asarray(jax.device_get(ls)))
+    return losses
 
 
 def run_chain(chain: Sequence[ModelConfig], dcfg: DistillConfig,
               train_batches: Callable[[], list], eval_batches: list,
               steps_per_stage: int, seed: int = 0,
-              teacher_params=None, use_kernel: bool = False,
-              trained_teacher_steps: int = 0):
+              teacher_params=None, kd_kernel: str = "pallas",
+              trained_teacher_steps: int = 0,
+              epoch_len: int | None = None):
     """Run the teacher -> TA* -> student distillation chain.
 
-    chain[0] is the (pre-)trained teacher; each subsequent model distils from
-    the previous stage's result. Returns (final_params, [StageResult]).
+    chain[0] is the (pre-)trained teacher; each subsequent model distils
+    from the previous stage's result. Each stage runs as scan-epoch
+    programs of up to ``epoch_len`` steps (default: the whole stage is one
+    program). Returns (final_params, [StageResult]).
     """
+    for prev, nxt in zip(chain[:-1], chain[1:]):
+        _check_widths(prev, nxt)
     key = jax.random.PRNGKey(seed)
     results = []
+    E = epoch_len or max(steps_per_stage, 1)
 
     # teacher: train from scratch if params not given (server-side pretrain)
     tcfg = chain[0]
     if teacher_params is None:
         teacher_params = registry.init_params(key, tcfg)
         if trained_teacher_steps:
-            step, opt = make_scratch_step(tcfg, dcfg)
-            st = opt.init(teacher_params)
-            for i, batch in zip(range(trained_teacher_steps),
-                                train_batches()):
-                teacher_params, st, _ = step(teacher_params, st, batch)
+            run = make_scratch_run(tcfg, dcfg)
+            state = {"params": teacher_params, "opt": run.opt.init(
+                teacher_params)}
+
+            def _pretrain_epoch(stacked):
+                state["params"], state["opt"], ls = run.epoch(
+                    state["params"], state["opt"], stacked, donate=True)
+                return ls
+
+            _run_epochs(_pretrain_epoch, iter(train_batches()),
+                        trained_teacher_steps, E)
+            teacher_params = state["params"]
 
     prev_params, prev_cfg = teacher_params, tcfg
     for scfg in chain[1:]:
-        if scfg.vocab_size != prev_cfg.vocab_size and \
-                scfg.num_classes != prev_cfg.num_classes:
-            raise ValueError(
-                f"KD needs equal logit width: {prev_cfg.name} vs {scfg.name}")
         key, sub = jax.random.split(key)
         params = registry.init_params(sub, scfg)
-        step, opt = make_distill_step(scfg, dcfg, use_kernel=use_kernel)
-        opt_state = opt.init(params)
-        teacher_logits_j = jax.jit(
-            functools.partial(registry.logits_fn, cfg=prev_cfg))
+        engine = make_distill_engine(prev_cfg, scfg, dcfg,
+                                     kd_kernel=kd_kernel)
+        state = {"params": params, "opt": engine.opt.init(params)}
         res = StageResult(teacher=prev_cfg.name, student=scfg.name)
         t0 = time.perf_counter()
-        for i, batch in zip(range(steps_per_stage), train_batches()):
-            t_logits = teacher_logits_j(params=prev_params, batch=batch)
-            params, opt_state, loss = step(params, opt_state, batch, t_logits)
-            res.losses.append(float(loss))
+
+        def _kd_epoch(stacked, _teacher=prev_params, _state=state,
+                      _engine=engine):
+            _state["params"], _state["opt"], ls = _engine.epoch(
+                _teacher, _state["params"], _state["opt"], stacked,
+                donate=True)
+            return ls
+
+        res.losses = _run_epochs(_kd_epoch, iter(train_batches()),
+                                 steps_per_stage, E)
         res.wall_time_s = time.perf_counter() - t0
-        res.accuracy = evaluate(params, scfg, eval_batches)
+        res.compiles = engine.num_compiled
+        res.accuracy = evaluate(state["params"], scfg, eval_batches)
         results.append(res)
-        prev_params, prev_cfg = params, scfg
+        prev_params, prev_cfg = state["params"], scfg
 
     return prev_params, results
+
+
+# ---------------------------------------------------------------------------
+# Codistillation across heterogeneous capacities (beyond the paper;
+# PAPERS.md: Knowledge Codistillation)
+# ---------------------------------------------------------------------------
+
+class CodistillFleet:
+    """m peers of heterogeneous capacity co-training on a shared probe
+    stream. Each round: (1) every member's logits on the round's probe
+    stack compute once (one vmapped program per architecture group);
+    (2) each member runs a masked KD scan against the mean of its *peers'*
+    round-start logits (the codistillation exchange — teacher signals are
+    deliberately one round stale, that is the algorithm). Members sharing
+    a ModelConfig batch as one program: stacked params, per-member
+    iteration budgets H^k as a traced int32 vector (the padded-scan
+    pattern), so a 100-member two-architecture fleet compiles like a
+    2-member one.
+
+    State (group-stacked params/opt) lives on the fleet; ``round`` mutates
+    it and returns the member-major loss matrix (m, H), NaN past each
+    member's budget.
+    """
+
+    def __init__(self, cfgs: Sequence[ModelConfig], dcfg: DistillConfig,
+                 kd_kernel: str = "pallas", clip_norm: float = 1.0):
+        if len(cfgs) < 2:
+            raise ValueError("codistillation needs >= 2 members")
+        if kd_kernel not in KD_KERNELS:
+            raise ValueError(
+                f"kd_kernel must be one of {KD_KERNELS}, got {kd_kernel!r}")
+        for other in cfgs[1:]:
+            _check_widths(cfgs[0], other)
+        fam0 = _probe_family(cfgs[0])
+        for c in cfgs[1:]:
+            if _probe_family(c) != fam0:
+                raise ValueError(
+                    "codistillation members must share a probe batch "
+                    f"format: {cfgs[0].family} vs {c.family}")
+        self.cfgs = tuple(cfgs)
+        self.dcfg = dcfg
+        self.kd_kernel = kd_kernel
+        self.clip_norm = clip_norm
+        self.opt = sgd(dcfg.lr, dcfg.momentum, dcfg.weight_decay)
+        # group members by architecture: cfg -> member indices
+        groups: dict = {}
+        for i, c in enumerate(cfgs):
+            groups.setdefault(c, []).append(i)
+        self.groups = [(c, tuple(idx)) for c, idx in groups.items()]
+        self._params = [None] * len(self.groups)   # group-stacked pytrees
+        self._opt = [None] * len(self.groups)
+        self._jits = _JitCache()
+
+    @property
+    def num_members(self) -> int:
+        return len(self.cfgs)
+
+    @property
+    def num_compiled(self) -> int:
+        return self._jits.num_compiled
+
+    def init(self, key):
+        for gi, (cfg, idx) in enumerate(self.groups):
+            keys = jax.random.split(jax.random.fold_in(key, gi), len(idx))
+            members = [registry.init_params(k, cfg) for k in keys]
+            self._params[gi] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *members)
+            self._opt[gi] = jax.vmap(self.opt.init)(self._params[gi])
+        return self
+
+    def member_params(self, i: int):
+        """Unstack member i's params (eager slice — a reporting path)."""
+        for gi, (cfg, idx) in enumerate(self.groups):
+            if i in idx:
+                j = idx.index(i)
+                return jax.tree_util.tree_map(
+                    lambda a: a[j], self._params[gi])
+        raise IndexError(i)
+
+    # -- traced cores ----------------------------------------------------
+    def _group_logits(self, gparams, stacked, *, cfg):
+        def one(p):
+            return jax.vmap(
+                lambda b: registry.logits_fn(p, cfg, b))(stacked)
+
+        return jax.vmap(one)(gparams)          # (m_g, H, ...logits)
+
+    def _group_kd(self, gparams, gopt, stacked, iters, sum_logits,
+                  own_logits, *, cfg, n_total):
+        """Per-group masked KD scan: teacher = mean of the *other* members'
+        logits, (Σ_all - own) / (n-1); steps past each member's H^k are
+        identity on the carry (the fed engine's padded-scan pattern)."""
+        H = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+
+        def one(params, opt_state, own, n_iters):
+            # n_total is partial-bound static python: trace-time constant
+            teacher_seq = (sum_logits - own) / (n_total - 1.0)
+
+            def body(carry, xs):
+                i, batch, t_logits = xs
+                params, opt_state = carry
+
+                def loss_fn(p):
+                    logits = registry.logits_fn(p, cfg, batch)
+                    return kd_loss(logits, t_logits, batch["labels"],
+                                   self.dcfg.alpha,
+                                   temperature=self.dcfg.temperature,
+                                   kd_kernel=self.kd_kernel)
+
+                loss, grads = jax.value_and_grad(loss_fn)(params)
+                grads = clip_by_global_norm(grads, self.clip_norm)
+                new_params, new_opt = self.opt.update(
+                    grads, opt_state, params)
+                active = i < n_iters
+                params, opt_state = jax.tree_util.tree_map(
+                    lambda new, old: jnp.where(active, new, old),
+                    (new_params, new_opt), (params, opt_state))
+                return (params, opt_state), jnp.where(active, loss, jnp.nan)
+
+            (params, opt_state), losses = jax.lax.scan(
+                body, (params, opt_state),
+                (jnp.arange(H, dtype=jnp.int32), stacked, teacher_seq))
+            return params, opt_state, losses
+
+        return jax.vmap(one)(gparams, gopt, own_logits, iters)
+
+    def round(self, stacked_probe, iters=None):
+        """One codistillation round over a probe stack (leaves (H, B, ...)).
+
+        ``iters``: (m,) per-member iteration budgets (default: all run the
+        full H). Warm rounds at a fixed (H, batch) shape compile nothing.
+        Returns the member-major loss matrix (m, H).
+        """
+        H = int(jax.tree_util.tree_leaves(stacked_probe)[0].shape[0])
+        m = self.num_members
+        if iters is None:
+            iters = np.full((m,), H, np.int32)
+        iters = np.asarray(iters, np.int32)
+        if iters.shape != (m,):
+            raise ValueError(f"iters must be ({m},), got {iters.shape}")
+
+        # (1) round-start logits, one program per architecture group
+        group_logits = []
+        for gi, (cfg, idx) in enumerate(self.groups):
+            group_logits.append(self._jits.call(
+                ("logits", gi),
+                functools.partial(self._group_logits, cfg=cfg), (),
+                (self._params[gi], stacked_probe)))
+
+        # (2) peer-ensemble teacher + masked KD scan per group
+        sum_logits = functools.reduce(
+            jnp.add, [jnp.sum(gl, axis=0) for gl in group_logits])
+        losses = [None] * m
+        for gi, (cfg, idx) in enumerate(self.groups):
+            g_iters = jnp.asarray(iters[list(idx)], jnp.int32)
+            self._params[gi], self._opt[gi], g_losses = self._jits.call(
+                ("kd", gi),
+                functools.partial(self._group_kd, cfg=cfg, n_total=m), (),
+                (self._params[gi], self._opt[gi], stacked_probe, g_iters,
+                 sum_logits, group_logits[gi]))
+            for j, i in enumerate(idx):
+                losses[i] = g_losses[j]
+        return jnp.stack(losses)
+
+
+def _probe_family(cfg: ModelConfig) -> str:
+    """Probe-batch format class: members must agree to share batches."""
+    if cfg.family == "resnet3d":
+        return "clips"
+    if cfg.family in registry.ENCDEC_FAMILIES:
+        return "src+tokens"
+    return "tokens"
+
+
+def run_codistill(cfgs: Sequence[ModelConfig], dcfg: DistillConfig,
+                  train_batches: Callable[[], list], eval_batches: list,
+                  rounds: int, steps_per_round: int, iters=None,
+                  seed: int = 0, kd_kernel: str = "pallas"):
+    """Convenience driver: ``rounds`` codistillation rounds of
+    ``steps_per_round`` probe batches each. Returns
+    ``(fleet, {"losses": (rounds, m, H) float array, "accuracy": [m]})``.
+    """
+    from repro.data import stack_batches
+    fleet = CodistillFleet(cfgs, dcfg, kd_kernel=kd_kernel).init(
+        jax.random.PRNGKey(seed))
+    it = iter(train_batches())
+    history = []
+    for _ in range(rounds):
+        stacked = stack_batches(it, limit=steps_per_round)
+        if stacked is None:
+            it = iter(train_batches())      # fresh pass over the stream
+            stacked = stack_batches(it, limit=steps_per_round)
+            if stacked is None:
+                break
+        history.append(np.asarray(jax.device_get(
+            fleet.round(stacked, iters=iters))))
+    accs = [evaluate(fleet.member_params(i), cfgs[i], eval_batches)
+            for i in range(len(cfgs))]
+    return fleet, {"losses": np.asarray(history), "accuracy": accs}
 
 
 # ---------------------------------------------------------------------------

@@ -316,15 +316,31 @@ def _engine_key(kind, cfg: ModelConfig, fed: FedConfig, loss_kwargs):
     return key
 
 
-def _cached_engine(kind, cfg, fed, loss_kwargs, build):
-    key = _engine_key(kind, cfg, fed, loss_kwargs)
-    if key is None:                       # unhashable loss_kwargs
+def cached_engine(key, build):
+    """FIFO-bounded engine memo shared across subsystems.
+
+    Engines hold compiled executables, so repeated construction (sweeps,
+    benchmarks, the KD->fine-tune pipeline) must reuse them. The fed
+    engines key through ``_engine_key``; the distillation engines
+    (``core.distill``) bring their own hashable keys. ``key=None`` (or an
+    unhashable key) skips memoization and builds fresh.
+    """
+    if key is not None:
+        try:
+            hash(key)
+        except TypeError:
+            key = None
+    if key is None:
         return build()
     if key not in _ENGINE_CACHE:
         while len(_ENGINE_CACHE) >= _ENGINE_CACHE_MAX:
             _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
         _ENGINE_CACHE[key] = build()
     return _ENGINE_CACHE[key]
+
+
+def _cached_engine(kind, cfg, fed, loss_kwargs, build):
+    return cached_engine(_engine_key(kind, cfg, fed, loss_kwargs), build)
 
 
 def make_client_run(cfg: ModelConfig, fed: FedConfig,

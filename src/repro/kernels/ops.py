@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.kd_loss import kd_loss_pallas
+from repro.kernels.kd_loss import kd_loss_rows as _kd_loss_rows
 from repro.kernels.ssd_scan import ssd_decode_step_pallas, ssd_scan_pallas
 from repro.kernels.swa_attention import (extent_decode_attend_pallas,
                                          ring_decode_attend_pallas,
@@ -32,9 +33,10 @@ def _interpret() -> bool:
 # compile keys are the declared static_argnames — already the discipline
 # JitCache enforces, with no donation or entry-point multiplexing to pool.
 # repro-lint: disable=R1
-@functools.partial(jax.jit, static_argnames=("alpha",))
-def kd_loss(student_logits, teacher_logits, labels, alpha: float):
-    """Mean fused KD loss over all rows (α·CE + (1-α)·Σ(s-t)²)."""
+@functools.partial(jax.jit, static_argnames=("alpha", "temperature"))
+def kd_loss(student_logits, teacher_logits, labels, alpha: float,
+            temperature: float = 1.0):
+    """Mean fused KD loss over all rows (α·CE + (1-α)·Σ((s-t)/T)²)."""
     R = 1
     for dim in student_logits.shape[:-1]:
         R *= dim
@@ -42,8 +44,24 @@ def kd_loss(student_logits, teacher_logits, labels, alpha: float):
     per_row = kd_loss_pallas(student_logits.reshape(R, V),
                              teacher_logits.reshape(R, V),
                              labels.reshape(R), alpha,
+                             temperature=temperature,
                              interpret=_interpret())
     return jnp.mean(per_row)
+
+
+# Not jitted (like the decode-step kernels below): this is the loss leaf of
+# the distillation engine's scan programs, which its JitCache compiles as a
+# whole — a nested module-level jit would fragment that cache. The analytic
+# custom_vjp makes it a drop-in for value_and_grad inside those programs.
+def kd_loss_rows(student_logits, teacher_logits, labels, alpha: float,
+                 temperature: float = 1.0, valid=None):
+    """Differentiable per-row fused KD loss; (R, V) in, (R,) f32 out.
+
+    Masked rows (``valid`` == 0) produce exactly-zero loss and gradients.
+    """
+    return _kd_loss_rows(student_logits, teacher_logits, labels, alpha,
+                         temperature=temperature, valid=valid,
+                         interpret=_interpret())
 
 
 # repro-lint: disable=R1  (see kd_loss note above)

@@ -5,18 +5,26 @@ import jax
 import jax.numpy as jnp
 
 
-def kd_loss_ref(student_logits, teacher_logits, labels, alpha: float):
-    """Per-row fused KD loss: α·CE + (1-α)·Σ(s-t)² . Rows = flattened batch.
+def kd_loss_ref(student_logits, teacher_logits, labels, alpha: float,
+                temperature: float = 1.0, valid=None):
+    """Per-row fused KD loss: α·CE + (1-α)·Σ((s-t)/T)². Rows = flattened
+    batch; T=1 is the paper's plain MSE-on-logits.
 
     student/teacher: (R, V); labels: (R,) int32. Returns (R,) float32.
+    Rows where ``valid`` == 0 return exactly 0.0 (select, not multiply,
+    so garbage logits in masked rows cannot leak NaN/Inf).
     """
     s = student_logits.astype(jnp.float32)
     t = teacher_logits.astype(jnp.float32)
     lse = jax.nn.logsumexp(s, axis=-1)
     gold = jnp.take_along_axis(s, labels[:, None], axis=-1)[:, 0]
     ce = lse - gold
-    sq = jnp.sum(jnp.square(s - t), axis=-1)
-    return alpha * ce + (1.0 - alpha) * sq
+    d = (s - t) / temperature
+    sq = jnp.sum(d * d, axis=-1)
+    out = alpha * ce + (1.0 - alpha) * sq
+    if valid is None:
+        return out
+    return jnp.where(valid.astype(jnp.float32) > 0.0, out, 0.0)
 
 
 def swa_attention_ref(q, k, v, window: int, causal: bool = True):

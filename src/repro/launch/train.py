@@ -70,7 +70,13 @@ def main(argv=None):
                          "fused server mix and re-dispatch as one padded "
                          "batched program; 0 = event-by-event")
     ap.add_argument("--distill-first", action="store_true",
-                    help="run a tiny teacher->student KD stage first")
+                    help="run a tiny teacher->student KD stage first "
+                         "(see launch/pipeline.py for the full two-stage "
+                         "KD -> federated fine-tune driver)")
+    ap.add_argument("--kd-kernel", choices=list(distill.KD_KERNELS),
+                    default="pallas",
+                    help="KD loss implementation: fused Pallas kernel "
+                         "(default) or the eager jnp parity oracle")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args(argv)
@@ -93,7 +99,8 @@ def main(argv=None):
         dcfg = DistillConfig(lr=0.01, chain=(teacher_cfg.name, cfg.name))
         params, stages = distill.run_chain(
             [teacher_cfg, cfg], dcfg, loader, eval_b,
-            steps_per_stage=16, seed=args.seed, trained_teacher_steps=16)
+            steps_per_stage=16, seed=args.seed, trained_teacher_steps=16,
+            kd_kernel=args.kd_kernel)
         for st in stages:
             print(f"  KD {st.teacher} -> {st.student}: "
                   f"acc={st.accuracy:.3f} ({st.wall_time_s:.1f}s)")

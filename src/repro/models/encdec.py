@@ -139,6 +139,22 @@ def decode_train(params, cfg: ModelConfig, tokens, enc_out,
     return rms_norm(x, params["final_norm"], cfg.norm_eps)
 
 
+def logits_fn(params, cfg: ModelConfig, batch: dict, remat: bool = False,
+              q_chunk: int = 1024):
+    """Full decoder logits (B, S_tgt, V) — the KD/codistillation surface.
+
+    batch: src_embeds (B, S_src, d), tokens (B, S_tgt). Unlike ``loss_fn``
+    the hidden->vocab projection is not chunked: distillation consumes the
+    whole logit tensor anyway.
+    """
+    enc_out = encode(params, cfg, batch["src_embeds"], remat=remat,
+                     q_chunk=q_chunk)
+    hidden = decode_train(params, cfg, batch["tokens"], enc_out,
+                          remat=remat, q_chunk=q_chunk)
+    head = lm_head_weight(params, cfg).astype(hidden.dtype)
+    return jnp.einsum("bsd,dv->bsv", hidden, head)
+
+
 def loss_fn(params, cfg: ModelConfig, batch: dict, remat: bool = True,
             q_chunk: int = 1024, loss_chunk: int = 512, dtype=None,
             act_pspec=None):

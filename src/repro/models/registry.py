@@ -46,19 +46,24 @@ def loss_fn(params, cfg: ModelConfig, batch: dict, **kw):
 
 
 def logits_fn(params, cfg: ModelConfig, batch: dict, **kw):
-    """Full logits (KD needs them). LM: (B,S,V); resnet: (B, classes)."""
+    """Full logits (KD needs them). LM: (B,S,V); resnet: (B, classes).
+
+    Each family module owns its logits composition; this dispatches.
+    """
     if cfg.family in LM_FAMILIES:
         return lm.logits_fn(params, cfg, batch["tokens"],
                             batch.get("prefix_embeds"), **kw)
     if cfg.family in ENCDEC_FAMILIES:
-        enc_out = encdec.encode(params, cfg, batch["src_embeds"], remat=False)
-        hidden = encdec.decode_train(params, cfg, batch["tokens"], enc_out,
-                                     remat=False)
-        head = lm.lm_head_weight(params, cfg).astype(hidden.dtype)
-        return jnp.einsum("bsd,dv->bsv", hidden, head)
+        return encdec.logits_fn(params, cfg, batch, **kw)
     if cfg.family == "resnet3d":
-        return resnet3d.forward(params, cfg, batch["clips"])
+        return resnet3d.logits_fn(params, cfg, batch, **kw)
     raise ValueError(cfg.family)
+
+
+def logit_width(cfg: ModelConfig) -> int:
+    """Width of the last logits axis — the KD compatibility contract: a
+    teacher and student can only distill if their widths match."""
+    return cfg.num_classes if cfg.family == "resnet3d" else cfg.vocab_size
 
 
 def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
@@ -155,7 +160,7 @@ def synth_batch(rng: np.random.Generator, cfg: ModelConfig,
     out = {}
     for k, s in spec.items():
         if s.dtype == jnp.int32:
-            hi = cfg.num_classes if cfg.family == "resnet3d" else cfg.vocab_size
+            hi = logit_width(cfg)
             out[k] = jnp.asarray(rng.integers(0, hi, s.shape, dtype=np.int32))
         else:
             out[k] = jnp.asarray(

@@ -98,6 +98,12 @@ def forward(params, cfg: ModelConfig, clips: jax.Array) -> jax.Array:
     return x @ params["fc"]["w"] + params["fc"]["b"]
 
 
+def logits_fn(params, cfg: ModelConfig, batch: dict, **_) -> jax.Array:
+    """Per-clip class logits (B, num_classes) from a batch dict — the
+    KD/codistillation surface (registry.logits_fn dispatches here)."""
+    return forward(params, cfg, batch["clips"])
+
+
 def loss_fn(params, cfg: ModelConfig, batch: dict, **_) -> tuple:
     """batch: clips (B, T, H, W, 3), labels (B,)."""
     logits = forward(params, cfg, batch["clips"])

@@ -239,6 +239,7 @@ class FedConfig:
 class DistillConfig:
     """Knowledge-distillation stage config (paper §III-B)."""
     alpha: float = 0.5                # L = α L_cls + (1-α) L_KD
+    temperature: float = 1.0          # L_KD = Σ((s-t)/T)²; T=1 = paper MSE
     lr: float = 0.1
     momentum: float = 0.9
     weight_decay: float = 1e-3

@@ -27,12 +27,130 @@ def test_kd_loss_formula(rng):
 
 
 def test_kd_loss_kernel_path_matches(rng):
+    """kd_kernel='pallas' (the default) == the eager jnp oracle — the
+    same flag discipline as serving's decode_kernel."""
     s = jnp.asarray(rng.standard_normal((6, 4, 100)), jnp.float32)
     t = jnp.asarray(rng.standard_normal((6, 4, 100)), jnp.float32)
     lab = jnp.asarray(rng.integers(0, 100, (6, 4)), jnp.int32)
-    a = distill.kd_loss(s, t, lab, 0.5, use_kernel=False)
-    b = distill.kd_loss(s, t, lab, 0.5, use_kernel=True)
+    a = distill.kd_loss(s, t, lab, 0.5, kd_kernel="eager")
+    b = distill.kd_loss(s, t, lab, 0.5, kd_kernel="pallas")
     np.testing.assert_allclose(float(a), float(b), rtol=1e-5)
+    # temperature routes through both paths identically
+    at = distill.kd_loss(s, t, lab, 0.5, temperature=3.0,
+                         kd_kernel="eager")
+    bt = distill.kd_loss(s, t, lab, 0.5, temperature=3.0,
+                         kd_kernel="pallas")
+    np.testing.assert_allclose(float(at), float(bt), rtol=1e-5)
+
+
+def test_kd_kernel_flag_validated(rng):
+    s = jnp.zeros((2, 8), jnp.float32)
+    lab = jnp.zeros((2,), jnp.int32)
+    with pytest.raises(ValueError, match="kd_kernel"):
+        distill.kd_loss(s, s, lab, 0.5, kd_kernel="einsum")
+    with pytest.raises(ValueError, match="kd_kernel"):
+        distill.DistillEngine(RESNET18.reduced(), RESNET18.reduced(),
+                              DistillConfig(), kd_kernel="cuda")
+
+
+TINY_LM = dict(family="dense", num_layers=1, d_model=32, num_heads=2,
+               num_kv_heads=2, d_ff=64, vocab_size=64)
+
+
+def _tiny_lm(name, **over):
+    from repro.types import ModelConfig
+    return ModelConfig(name=name, **{**TINY_LM, **over})
+
+
+def test_distill_engine_epoch_matches_per_step(rng):
+    """The scan-compiled epoch program == iterating the single-step
+    entry: same final params, same per-step losses."""
+    from repro.data import SyntheticLMDataset, stack_batches
+    tcfg = _tiny_lm("kd-teacher")
+    scfg = _tiny_lm("kd-student", d_model=16, d_ff=32)
+    dcfg = DistillConfig(lr=0.01, batch_size=2)
+    ds = SyntheticLMDataset(vocab=64, seq_len=8, seed=0)
+    batches = list(ds.batches(2, 3, seed=1))
+    stacked = stack_batches(iter(batches))
+
+    engine = distill.DistillEngine(tcfg, scfg, dcfg)
+    t_params = registry.init_params(jax.random.PRNGKey(0), tcfg)
+    params0 = registry.init_params(jax.random.PRNGKey(1), scfg)
+    opt0 = engine.opt.init(params0)
+
+    pe, oe, le = engine.epoch(t_params, params0, opt0, stacked)
+    ps, os_, ls = params0, opt0, []
+    for b in batches:
+        b = jax.tree_util.tree_map(jnp.asarray, b)
+        ps, os_, loss = engine.step(t_params, ps, os_, b)
+        ls.append(float(loss))
+    np.testing.assert_allclose(np.asarray(jax.device_get(le)),
+                               np.asarray(ls), rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(pe),
+                    jax.tree_util.tree_leaves(ps)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_distill_engine_memoized():
+    tcfg, scfg = RESNET34.reduced(), RESNET18.reduced()
+    dcfg = DistillConfig(lr=0.01)
+    e1 = distill.make_distill_engine(tcfg, scfg, dcfg)
+    e2 = distill.make_distill_engine(tcfg, scfg, dcfg)
+    assert e1 is e2                     # compiled epochs are reused
+    e3 = distill.make_distill_engine(tcfg, scfg, dcfg, kd_kernel="eager")
+    assert e3 is not e1                 # kernel choice is program identity
+    s1 = distill.make_scratch_run(tcfg, dcfg)
+    s2 = distill.make_scratch_run(tcfg, dcfg)
+    assert s1 is s2
+
+
+def test_codistill_heterogeneous_fleet_batches_by_arch(rng):
+    """Codistillation: members sharing an arch run as ONE vmapped masked-
+    scan program; per-member budgets mask via NaN; warm rounds compile
+    nothing new."""
+    from repro.data import SyntheticLMDataset, stack_batches
+    a = _tiny_lm("co-big")
+    b = _tiny_lm("co-small", d_model=16, d_ff=32)
+    dcfg = DistillConfig(lr=0.01)
+    fleet = distill.CodistillFleet([a, a, b], dcfg).init(
+        jax.random.PRNGKey(0))
+    ds = SyntheticLMDataset(vocab=64, seq_len=8, seed=0)
+    probe = stack_batches(iter(ds.batches(2, 4, seed=1)))
+
+    losses = np.asarray(jax.device_get(
+        fleet.round(probe, iters=[4, 2, 3])))
+    assert losses.shape == (3, 4)
+    assert np.isfinite(losses[0]).all()                  # full budget
+    assert np.isfinite(losses[1, :2]).all() and np.isnan(losses[1, 2:]).all()
+    assert np.isfinite(losses[2, :3]).all() and np.isnan(losses[2, 3:]).all()
+    # 2 architecture groups x (logits + kd) programs — NOT 3 members x 2
+    assert fleet.num_compiled == 4
+
+    n0 = fleet.num_compiled
+    probe2 = stack_batches(iter(ds.batches(2, 4, seed=2)))
+    fleet.round(probe2)                                  # warm, full iters
+    assert fleet.num_compiled == n0
+
+    # member params keep their own arch shapes
+    t1 = jax.tree_util.tree_structure(fleet.member_params(0))
+    t2 = jax.tree_util.tree_structure(
+        registry.init_params(jax.random.PRNGKey(9), a))
+    assert t1 == t2
+
+
+def test_codistill_rejects_bad_fleets():
+    a = _tiny_lm("co-a")
+    with pytest.raises(ValueError, match=">= 2"):
+        distill.CodistillFleet([a], DistillConfig())
+    import dataclasses
+    other_vocab = dataclasses.replace(a, name="co-v", vocab_size=32)
+    with pytest.raises(ValueError, match="equal logit width"):
+        distill.CodistillFleet([a, other_vocab], DistillConfig())
+    same_width_resnet = dataclasses.replace(RESNET18.reduced(),
+                                            num_classes=a.vocab_size)
+    with pytest.raises(ValueError, match="probe batch"):
+        distill.CodistillFleet([a, same_width_resnet], DistillConfig())
 
 
 @pytest.mark.slow

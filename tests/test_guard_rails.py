@@ -126,3 +126,91 @@ def test_fused_decode_steady_state_no_compiles(guard_rails,
     for p, m in zip(prompts, max_new):
         srv_e.submit(p, max_new=m)
     assert [r.out for r in srv_e.run()] == [r.out for r in done]
+
+
+# ---------------------------------------------------------------------------
+# PR-8: distillation as a compiled fleet workload
+# ---------------------------------------------------------------------------
+
+STUDENT = ModelConfig(name="guard-test-student", family="dense",
+                      num_layers=1, d_model=16, num_heads=2, num_kv_heads=2,
+                      d_ff=32, vocab_size=64)
+
+
+def _device_stack(ds, batch, steps, seed):
+    stacked = stack_batches(iter(ds.batches(batch, steps, seed=seed)))
+    return jax.device_put(jax.tree_util.tree_map(jnp.asarray, stacked))
+
+
+def test_distill_epoch_steady_state_no_compiles(guard_rails,
+                                                compile_budget):
+    """PR-8 invariant: a warm KD epoch (teacher fwd + student step per
+    scan iteration, fused Pallas KD loss) is ONE program — fresh epochs at
+    the same (H, batch) shape run with zero new compiles and zero
+    implicit host->device transfers."""
+    from repro.core.distill import DistillEngine
+    from repro.data import SyntheticLMDataset
+    from repro.types import DistillConfig
+
+    dcfg = DistillConfig(lr=0.01, batch_size=2)
+    ds = SyntheticLMDataset(vocab=TINY.vocab_size, seq_len=8, seed=0)
+    engine = DistillEngine(TINY, STUDENT, dcfg)   # private: isolate counts
+    t_params = registry.init_params(jax.random.PRNGKey(0), TINY)
+    params = registry.init_params(jax.random.PRNGKey(1), STUDENT)
+    opt = engine.opt.init(params)
+
+    stacked = _device_stack(ds, 2, 3, seed=1)
+    with compile_budget(engine, 1, exact=True):    # warm-up traces it
+        params, opt, losses = engine.epoch(t_params, params, opt, stacked)
+
+    for seed in (2, 3):
+        stacked = _device_stack(ds, 2, 3, seed=seed)
+        with guard_rails(), compile_budget(engine, 0, exact=True):
+            params, opt, losses = engine.epoch(t_params, params, opt,
+                                               stacked)
+        assert np.all(np.isfinite(jax.device_get(losses)))
+    assert engine.num_compiled == 1
+
+
+def test_kd_to_finetune_handoff_no_recompile(guard_rails, compile_budget):
+    """PR-8 invariant: the KD -> fine-tune handoff is pure data. The fed
+    engine's round program is keyed on shapes only, so feeding it
+    distilled student params instead of a scratch init triggers ZERO new
+    compiles and zero implicit transfers."""
+    from repro.core.distill import DistillEngine
+    from repro.data import SyntheticLMDataset
+    from repro.types import DistillConfig
+
+    ds = SyntheticLMDataset(vocab=TINY.vocab_size, seq_len=8, seed=0)
+    fed = FedConfig(num_clients=2, global_epochs=2, local_iters_min=2,
+                    local_iters_max=2, lr=0.01)
+    rnd = fed_engine.SyncRound(TINY, fed)    # private: isolate cache counts
+    scratch = registry.init_params(jax.random.PRNGKey(0), TINY)
+    mask = jax.tree_util.tree_map(
+        lambda _: jnp.asarray(1.0, jnp.float32), scratch)
+    weights = jnp.full((2,), 0.5, jnp.float32)
+
+    def client_stack(seed0):
+        stacks = [stack_batches(iter(ds.batches(2, 2, seed=seed0 + k)))
+                  for k in range(2)]
+        both = {k: np.stack([s[k] for s in stacks]) for k in stacks[0]}
+        return jax.device_put(jax.tree_util.tree_map(jnp.asarray, both))
+
+    stacks = client_stack(10)
+    with compile_budget(rnd, 1, exact=True):       # warm the round program
+        rnd(scratch, stacks, weights, mask=mask)
+
+    # stage 1: distill a student of the SAME deployable arch (self-KD at
+    # test scale), then hand its params to the warm round program
+    dcfg = DistillConfig(lr=0.01, batch_size=2)
+    engine = DistillEngine(TINY, TINY, dcfg)
+    opt = engine.opt.init(scratch)
+    distilled, _, _ = engine.epoch(
+        registry.init_params(jax.random.PRNGKey(3), TINY),
+        scratch, opt, _device_stack(ds, 2, 3, seed=5))
+
+    stacks = client_stack(20)
+    with guard_rails(), compile_budget(rnd, 0, exact=True):
+        new_global, losses = rnd(distilled, stacks, weights, mask=mask)
+    assert np.all(np.isfinite(jax.device_get(losses)))
+    assert rnd.num_compiled == 1

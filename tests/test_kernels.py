@@ -41,6 +41,93 @@ def test_kd_loss_jit_wrapper_means(rng):
     np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
 
 
+# T -> 0+ blows the MSE term up by 1/T² (tolerance scales with it),
+# T >> 1 squashes it to ~0; alpha 0/1 turn off the CE / KD term entirely
+@pytest.mark.parametrize("temperature", [1e-3, 0.5, 1.0, 100.0])
+@pytest.mark.parametrize("alpha", [0.0, 1.0])
+def test_kd_loss_temperature_alpha_extremes(temperature, alpha, rng):
+    R, V = 16, 384
+    s = jnp.asarray(rng.standard_normal((R, V)), jnp.float32)
+    t = jnp.asarray(rng.standard_normal((R, V)), jnp.float32)
+    lab = jnp.asarray(rng.integers(0, V, R), jnp.int32)
+    got = kd_loss_pallas(s, t, lab, alpha, temperature=temperature,
+                         interpret=True)
+    want = ref.kd_loss_ref(s, t, lab, alpha, temperature=temperature)
+    scale = max(1.0, float(jnp.max(jnp.abs(want))))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5 * scale)
+    if alpha == 1.0:
+        # pure CE: temperature must be a strict no-op
+        base = kd_loss_pallas(s, t, lab, 1.0, temperature=1.0,
+                              interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+def test_kd_loss_masked_rows_exact_noop(rng):
+    """Padded rows are *bitwise* no-ops: garbage (NaN/Inf/huge) logits in
+    masked rows must not perturb any valid row, and masked outputs are
+    exactly zero — forward and backward."""
+    R, V = 8, 256
+    s = jnp.asarray(rng.standard_normal((R, V)), jnp.float32)
+    t = jnp.asarray(rng.standard_normal((R, V)), jnp.float32)
+    lab = jnp.asarray(rng.integers(0, V, R), jnp.int32)
+    clean = kd_loss_pallas(s, t, lab, 0.5, interpret=True)
+
+    garbage = jnp.stack([jnp.full((V,), jnp.nan, jnp.float32),
+                         jnp.full((V,), jnp.inf, jnp.float32),
+                         jnp.full((V,), 1e30, jnp.float32)])
+    s_pad = jnp.concatenate([s, garbage])
+    t_pad = jnp.concatenate([t, garbage])
+    lab_pad = jnp.concatenate([lab, jnp.zeros((3,), jnp.int32)])
+    valid = jnp.concatenate([jnp.ones((R,), jnp.float32),
+                             jnp.zeros((3,), jnp.float32)])
+    padded = kd_loss_pallas(s_pad, t_pad, lab_pad, 0.5, valid=valid,
+                            interpret=True)
+    assert np.array_equal(np.asarray(padded[:R]), np.asarray(clean))
+    assert np.array_equal(np.asarray(padded[R:]), np.zeros(3, np.float32))
+
+    # backward through the custom-vjp rows entry: masked rows get 0 grads
+    from repro.kernels.kd_loss import kd_loss_rows
+
+    def total(sp, tp):
+        return jnp.sum(kd_loss_rows(sp, tp, lab_pad, 0.5, valid=valid))
+
+    ds, dt_ = jax.grad(total, argnums=(0, 1))(s_pad, t_pad)
+    assert np.array_equal(np.asarray(ds[R:]), np.zeros((3, V), np.float32))
+    assert np.array_equal(np.asarray(dt_[R:]), np.zeros((3, V), np.float32))
+    assert np.isfinite(np.asarray(ds[:R])).all()
+    assert np.isfinite(np.asarray(dt_[:R])).all()
+
+
+@pytest.mark.parametrize("alpha,temperature", [(0.0, 1.0), (1.0, 1.0),
+                                               (0.3, 2.0), (0.5, 0.5)])
+def test_kd_loss_rows_grad_matches_eager(alpha, temperature, rng):
+    """The kernel's analytic custom-vjp backward == jax autodiff through
+    the eager oracle (the property the distill engine's training relies
+    on when kd_kernel='pallas')."""
+    from repro.kernels.kd_loss import kd_loss_rows
+    R, V = 12, 320
+    s = jnp.asarray(rng.standard_normal((R, V)), jnp.float32)
+    t = jnp.asarray(rng.standard_normal((R, V)), jnp.float32)
+    lab = jnp.asarray(rng.integers(0, V, R), jnp.int32)
+    w = jnp.asarray(rng.standard_normal(R), jnp.float32)   # mixed cotangent
+
+    def f_kernel(sp, tp):
+        return jnp.sum(w * kd_loss_rows(sp, tp, lab, alpha,
+                                        temperature=temperature))
+
+    def f_eager(sp, tp):
+        return jnp.sum(w * ref.kd_loss_ref(sp, tp, lab, alpha,
+                                           temperature=temperature))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1))(s, t)
+    ge = jax.grad(f_eager, argnums=(0, 1))(s, t)
+    scale = max(1.0, float(jnp.max(jnp.abs(ge[0]))))
+    for a, b in zip(gk, ge):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5 * scale)
+
+
 # ---------------------------------------------------------------------------
 # swa_attention
 # ---------------------------------------------------------------------------

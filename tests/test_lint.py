@@ -291,3 +291,20 @@ def test_cli_check_passes_on_tree():
         [sys.executable, str(ROOT / "tools" / "repro_lint.py"),
          "--check"], capture_output=True, text=True)
     assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_baseline_is_empty_and_stays_empty():
+    """PR 8 drained the last baselined debt (distill's direct jits moved
+    onto the JitCache engines): the baseline is [] and the live tree is
+    clean WITHOUT it. New code must never re-grow the baseline — fix or
+    suppress-with-justification instead."""
+    import json
+    baseline = json.loads(
+        (ROOT / "tools" / "lint_baseline.json").read_text())
+    assert baseline["findings"] == [], (
+        "lint_baseline.json grew again; fix the findings or suppress "
+        "them inline with a justification:\n"
+        f"{baseline['findings']}")
+    # and the tree is clean against an EMPTY baseline, so the file is
+    # now purely a ratchet, not a debt ledger
+    assert lint.scan_paths(ROOT) == []

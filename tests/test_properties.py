@@ -88,6 +88,81 @@ def test_kd_loss_nonnegative_and_zero_at_match(rows, vocab, alpha, seed):
     np.testing.assert_allclose(np.asarray(pure_mse), 0.0, atol=1e-5)
 
 
+@given(rows=st.integers(1, 10), vocab=st.integers(2, 200),
+       alpha=st.floats(0.0, 1.0), temperature=st.floats(0.1, 10.0),
+       seed=st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_kd_loss_convex_in_alpha(rows, vocab, alpha, temperature, seed):
+    """L(α) is the exact convex combination α·L(1) + (1-α)·L(0) per row —
+    the α knob interpolates the CE and KD terms, nothing else — and the
+    fused kernel agrees with the oracle along the whole segment."""
+    from repro.kernels.kd_loss import kd_loss_pallas
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray(rng.standard_normal((rows, vocab)), jnp.float32)
+    t = jnp.asarray(rng.standard_normal((rows, vocab)), jnp.float32)
+    lab = jnp.asarray(rng.integers(0, vocab, rows), jnp.int32)
+    l0 = ref.kd_loss_ref(s, t, lab, 0.0, temperature=temperature)
+    l1 = ref.kd_loss_ref(s, t, lab, 1.0, temperature=temperature)
+    la = ref.kd_loss_ref(s, t, lab, alpha, temperature=temperature)
+    want = alpha * l1 + (1 - alpha) * l0
+    scale = max(1.0, float(jnp.max(jnp.abs(want))))
+    np.testing.assert_allclose(np.asarray(la), np.asarray(want),
+                               rtol=1e-5, atol=1e-5 * scale)
+    lk = kd_loss_pallas(s, t, lab, alpha, temperature=temperature,
+                        interpret=True)
+    np.testing.assert_allclose(np.asarray(lk), np.asarray(la),
+                               rtol=1e-5, atol=1e-5 * scale)
+
+
+@given(rows=st.integers(1, 8), vocab=st.integers(2, 128),
+       alpha=st.floats(0.0, 1.0), shift=st.floats(-30.0, 30.0),
+       seed=st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_kd_loss_invariant_to_logit_shift(rows, vocab, alpha, shift, seed):
+    """Adding the same constant to student AND teacher logits changes
+    nothing: softmax-CE is shift-invariant and the MSE term sees only
+    s - t. Holds for the oracle and the fused kernel."""
+    from repro.kernels.kd_loss import kd_loss_pallas
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray(rng.standard_normal((rows, vocab)), jnp.float32)
+    t = jnp.asarray(rng.standard_normal((rows, vocab)), jnp.float32)
+    lab = jnp.asarray(rng.integers(0, vocab, rows), jnp.int32)
+    base = ref.kd_loss_ref(s, t, lab, alpha)
+    shifted = ref.kd_loss_ref(s + shift, t + shift, lab, alpha)
+    scale = max(1.0, float(jnp.max(jnp.abs(base))))
+    np.testing.assert_allclose(np.asarray(shifted), np.asarray(base),
+                               rtol=1e-4, atol=1e-4 * scale)
+    k_shift = kd_loss_pallas(s + shift, t + shift, lab, alpha,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(k_shift), np.asarray(base),
+                               rtol=1e-4, atol=1e-4 * scale)
+
+
+@given(log10_scale=st.floats(-3.0, 3.0), alpha=st.floats(0.0, 1.0),
+       temperature=st.floats(0.5, 4.0), seed=st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_kd_loss_rows_grad_finite_across_scales(log10_scale, alpha,
+                                                temperature, seed):
+    """The kernel's analytic backward stays finite from 1e-3x to 1e3x
+    logit magnitudes (the training engine clips by global norm, but the
+    raw gradients must never be NaN/Inf to begin with)."""
+    from repro.kernels.kd_loss import kd_loss_rows
+    rng = np.random.default_rng(seed)
+    rows, vocab = 6, 96
+    mag = 10.0 ** log10_scale
+    s = jnp.asarray(rng.standard_normal((rows, vocab)) * mag, jnp.float32)
+    t = jnp.asarray(rng.standard_normal((rows, vocab)) * mag, jnp.float32)
+    lab = jnp.asarray(rng.integers(0, vocab, rows), jnp.int32)
+
+    def total(sp, tp):
+        return jnp.sum(kd_loss_rows(sp, tp, lab, alpha,
+                                    temperature=temperature))
+
+    ds, dt = jax.grad(total, argnums=(0, 1))(s, t)
+    assert np.isfinite(np.asarray(ds)).all()
+    assert np.isfinite(np.asarray(dt)).all()
+
+
 @given(E=st.integers(1, 10**6), beta=st.floats(0.05, 0.95),
        K=st.integers(1, 32), lam=st.floats(1.0, 8.0))
 @settings(max_examples=50, deadline=None)
