@@ -1,0 +1,148 @@
+"""Streaming fleets: resident state vs population, flat vs hierarchical.
+
+The PR's memory-model claim (core/fleet.py): a ``FleetSpec`` fleet holds
+client state only for the sampled / in-flight set, so the resident
+footprint is O(m), flat in the population — a 10^6-client fleet costs
+the same handful of materialized clients as a 10^3 one. This bench
+sweeps the population at fixed per-round sample size m and records the
+``max_resident`` / ``max_inflight`` high-water marks plus fleet
+construction and round wall-clock (both must stay population-flat), then
+times the sampled sync round through the flat 1-D psum engine vs the
+two-level ``('edge','clients')`` hierarchical edge-aggregator tree —
+same weighted average (the fleet property tests pin equality), different
+reduction topology.
+
+``--smoke`` runs the CI shapes and HARD-FAILS if the 10^6-population
+round materializes more than the sampled set (the O(sampled) guarantee
+this PR ships).
+
+    PYTHONPATH=src python -m benchmarks.run fleet
+    PYTHONPATH=src python -m benchmarks.fleet_bench --smoke
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core import fedavg, simulator
+from repro.core.fleet import (Fleet, FleetSpec, JETSON_FLEET_HMDB51)
+from repro.data import SyntheticLMDataset
+from repro.models import registry
+from repro.types import FedConfig, ModelConfig
+
+# dispatch-bound regime, same as fed_engine_bench: fleet-scale models are
+# reduced, so the interesting costs are materialization and aggregation
+BENCH_CFG = ModelConfig(name="fleet-bench-tiny", family="dense",
+                        num_layers=1, d_model=32, num_heads=2,
+                        num_kv_heads=2, d_ff=64, vocab_size=64)
+
+ARTIFACT = "BENCH_fleet.json"
+
+
+def _spec(population: int, ds) -> FleetSpec:
+    return FleetSpec(population=population, profiles=JETSON_FLEET_HMDB51,
+                     dataset=ds, batch_size=2, steps=4, partition="shared")
+
+
+def _timeit(f, iters: int):
+    f()                                       # warm / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f()
+    jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+    return (time.perf_counter() - t0) / iters
+
+
+def fleet_bench(smoke: bool | None = None,
+                out_json: str | None = ARTIFACT):
+    """Resident state vs population + flat vs hierarchical round timing."""
+    if smoke is None:
+        smoke = "--smoke" in sys.argv[1:]
+    print("\n== fleet bench (streaming populations, sampled rounds) ==")
+    cfg = BENCH_CFG
+    m = 4 if smoke else 8
+    populations = [10**3, 10**6] if smoke else [10**3, 10**4, 10**5, 10**6]
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    ds = SyntheticLMDataset(vocab=cfg.vocab_size, seq_len=8, seed=0)
+    rows, sweep = [], []
+
+    # -- resident state + round wall-clock vs population ----------------
+    for pop in populations:
+        fed = FedConfig(num_clients=pop, clients_per_round=m,
+                        global_epochs=2 * m, lr=0.01, local_iters_min=1,
+                        local_iters_max=3)
+        t0 = time.perf_counter()
+        fleet = Fleet.from_spec(_spec(pop, ds))
+        build_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res = simulator.run_sync(params, cfg, fed, fleet)
+        sync_s = time.perf_counter() - t0
+        afleet = Fleet.from_spec(_spec(pop, ds))
+        t0 = time.perf_counter()
+        ares = simulator.run_async(params, cfg, fed, afleet)
+        async_s = time.perf_counter() - t0
+        entry = {"population": pop, "sampled_m": m,
+                 "build_s": build_s,
+                 "sync_rounds": len(res.history), "sync_s": sync_s,
+                 "sync_max_resident": fleet.max_resident,
+                 "async_epochs": len(ares.history), "async_s": async_s,
+                 "async_max_resident": afleet.max_resident,
+                 "async_max_inflight": ares.max_inflight}
+        sweep.append(entry)
+        print(f"  pop={pop:>9,}: resident sync={fleet.max_resident} "
+              f"async={afleet.max_resident} inflight={ares.max_inflight} "
+              f"(m={m}), sync {sync_s:.2f}s async {async_s:.2f}s")
+        if fleet.max_resident > m or afleet.max_resident > m \
+                or ares.max_inflight > m:
+            raise RuntimeError(
+                f"O(sampled) violated at population {pop}: "
+                f"sync resident {fleet.max_resident}, async resident "
+                f"{afleet.max_resident}, inflight {ares.max_inflight} "
+                f"> m={m}")
+    big = sweep[-1]
+    rows.append(("fleet_resident_1e6", big["sync_s"] * 1e6,
+                 f"max_resident {big['sync_max_resident']} of "
+                 f"{big['population']:,} (m={m})"))
+
+    # -- sampled-round throughput: flat psum vs hierarchical tree -------
+    fed = FedConfig(num_clients=m, lr=0.01, local_iters_min=1,
+                    local_iters_max=3)
+    iters = 5 if smoke else 20
+    spec = _spec(m, ds)
+    fleet = Fleet.from_spec(spec)
+    timing = {}
+    for eng in ("scan", "shard", "hier"):
+        batches = [list(fleet.data(k)()) for k in range(m)]
+        t = _timeit(lambda: fedavg.fedavg_round(
+            params, [iter(b) for b in batches], cfg, fed, engine=eng)[0],
+            iters)
+        timing[eng] = t
+        rows.append((f"fleet_round_{eng}", t * 1e6,
+                     f"m={m} sampled sync round, engine={eng}"))
+        print(f"  round engine={eng}: {t * 1e3:.2f} ms "
+              f"({len(jax.devices())} device(s))")
+
+    report = {
+        "config": {"model": cfg.name, "sampled_m": m, "smoke": smoke,
+                   "devices": len(jax.devices())},
+        "resident_vs_population": sweep,
+        "round_seconds": timing,
+        "note": "resident/in-flight high-water marks must be flat in the "
+                "population (O(sampled) streaming contract); flat vs "
+                "hier is the same weighted average through a 1-D psum "
+                "vs the ('edge','clients') aggregator tree",
+    }
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        return rows, [out_json]
+    return rows
+
+
+if __name__ == "__main__":
+    fleet_bench(smoke="--smoke" in sys.argv[1:])

@@ -17,11 +17,13 @@ from benchmarks import tables
 from benchmarks.roofline_table import roofline_table
 from benchmarks.kernel_bench import kernel_bench
 from benchmarks.fed_engine_bench import fed_engine_bench
+from benchmarks.fleet_bench import fleet_bench
 from benchmarks.serving_bench import serving_bench
 from benchmarks.distill_bench import distill_bench
 
 ALL = {
     "fedengine": fed_engine_bench,
+    "fleet": fleet_bench,
     "serving": serving_bench,
     "distill": distill_bench,
     "table1": tables.table1_kd_tas,

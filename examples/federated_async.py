@@ -18,10 +18,18 @@ import jax
 
 from repro.configs import get_config
 from repro.core import simulator
-from repro.core.simulator import JETSON_FLEET_HMDB51
+from repro.core.fleet import Fleet, JETSON_FLEET_HMDB51
 from repro.data import BatchLoader, SyntheticLMDataset
 from repro.models import registry
 from repro.types import FedConfig
+
+
+def make_fleet():
+    # one Fleet object replaces the old parallel fleet/client_data args;
+    # Fleet.from_spec streams 10^6-client populations (docs/fleet.md)
+    return Fleet.from_lists(
+        JETSON_FLEET_HMDB51,
+        [BatchLoader(ds, 4, steps=4, seed=k) for k in range(4)])
 
 cfg = get_config("mamba2-130m").reduced()
 params = registry.init_params(jax.random.PRNGKey(0), cfg)
@@ -39,8 +47,7 @@ def make_fed(a):
 
 for a in (0.0, 0.5, 0.9):
     fed = make_fed(a)
-    data = [BatchLoader(ds, 4, steps=4, seed=k) for k in range(4)]
-    res = simulator.run_async(params, cfg, fed, JETSON_FLEET_HMDB51, data)
+    res = simulator.run_async(params, cfg, fed, make_fleet())
     tail = float(np.mean([l for _, _, l in res.history[-6:]]))
     print(f"  a={a:3.1f}: tail loss {tail:.4f}  "
           f"wall {res.wall_clock_s/3600:.2f}h  "
@@ -56,13 +63,10 @@ print("\npaper: a=0.5 converges fastest and reaches the best accuracy; "
 fed = make_fed(0.5)
 walls = {}
 for eng in ("scan", "loop"):
-    warm = [BatchLoader(ds, 4, steps=4, seed=k) for k in range(4)]
-    simulator.run_async(params, cfg, make_fed(0.5), JETSON_FLEET_HMDB51,
-                        warm, engine=eng)
-    data = [BatchLoader(ds, 4, steps=4, seed=k) for k in range(4)]
-    t0 = time.perf_counter()
-    simulator.run_async(params, cfg, fed, JETSON_FLEET_HMDB51, data,
+    simulator.run_async(params, cfg, make_fed(0.5), make_fleet(),
                         engine=eng)
+    t0 = time.perf_counter()
+    simulator.run_async(params, cfg, fed, make_fleet(), engine=eng)
     walls[eng] = time.perf_counter() - t0
 print(f"\nhost wall-clock, E=16: scan engine {walls['scan']:.2f}s vs "
       f"legacy loop {walls['loop']:.2f}s "

@@ -1,10 +1,11 @@
 # The paper's primary contribution: teacher->TA->student knowledge
 # distillation (distill.py) + asynchronous federated optimization with
 # staleness-adaptive mixing (fedasync.py), the synchronous FedAvg baseline
-# (fedavg.py), the heterogeneous-fleet event simulator (simulator.py) and
-# the convergence-bound evaluator (convergence.py).
+# (fedavg.py), the heterogeneous-fleet event simulator (simulator.py) with
+# its streaming million-client fleet layer (fleet.py) and the
+# convergence-bound evaluator (convergence.py).
 from repro.core import (convergence, distill, fed_engine, fedasync, fedavg,
-                        simulator)
+                        fleet, simulator)
 
-__all__ = ["distill", "fed_engine", "fedasync", "fedavg", "simulator",
-           "convergence"]
+__all__ = ["distill", "fed_engine", "fedasync", "fedavg", "fleet",
+           "simulator", "convergence"]

@@ -459,8 +459,8 @@ def make_sync_round(cfg: ModelConfig, fed: FedConfig,
 class ShardedSyncRound(SyncRound):
     """Padded sync round sharded over a device mesh with ``shard_map``.
 
-    The client axis splits across the mesh's ``'clients'`` axis
-    (``launch.mesh.make_fleet_mesh``; specs from
+    The client axis splits across the mesh's client axis (or axes —
+    ``launch.mesh.make_fleet_mesh``; specs from
     ``sharding.specs.fed_round_specs``): each shard scans its local
     clients under ``vmap``, reduces its weight-scaled parameter sum, and
     the global weighted average forms with ``psum``. Params and mask
@@ -468,6 +468,17 @@ class ShardedSyncRound(SyncRound):
     leading client axis. When n_clients does not divide the axis size the
     round pads with zero-weight, zero-iteration dummy clients and slices
     their losses back off.
+
+    On a two-level ``('edge', 'clients')`` mesh the reduction is the
+    *hierarchical edge-aggregator tree*: each shard's weight-scaled
+    partial first psums over ``'clients'`` (clients → their edge
+    aggregator), then the edge partials psum over ``'edge'`` (edge
+    aggregators → server). Since every weight-scaled client model is
+    added exactly once either way, the nested reduction equals the flat
+    psum weighted average — Σ_e Σ_{k∈e} w_k·θ_k = Σ_k w_k·θ_k — which
+    the fleet property tests assert (bit-identical on a single-shard
+    mesh, float32-close under real sharding where reduction order is
+    XLA's choice).
     """
 
     def __init__(self, cfg: ModelConfig, fed: FedConfig, mesh,
@@ -477,6 +488,11 @@ class ShardedSyncRound(SyncRound):
         self.mesh = mesh
         self._specs = sh.fed_round_specs(mesh)
         axis = self._specs["axis"]
+        # hierarchy levels, innermost (leaf) first: a 1-D mesh reduces in
+        # one psum; ('edge', 'clients') reduces clients-within-edge, then
+        # across edges
+        levels = tuple(reversed(axis)) if isinstance(axis, tuple) \
+            else (axis,)
 
         def shard_fn(params_global, stacked_shard, w_shard, it_shard, mask):
             w_news, losses = self.client._run_padded_batch(
@@ -484,15 +500,25 @@ class ShardedSyncRound(SyncRound):
             partial = jax.tree_util.tree_map(
                 lambda l: jnp.einsum("c,c...->...", w_shard,
                                      l.astype(jnp.float32)), w_news)
-            total = jax.lax.psum(partial, axis)
+            for level in levels:     # nested: leaf aggregators upward
+                partial = jax.lax.psum(partial, level)
             new = jax.tree_util.tree_map(
-                lambda t, p: t.astype(p.dtype), total, params_global)
+                lambda t, p: t.astype(p.dtype), partial, params_global)
             return new, losses
 
         c, r = self._specs["clients"], self._specs["replicated"]
         self._sharded_rnd = sh.shard_map(
             shard_fn, mesh=mesh, in_specs=(r, c, c, c, r),
             out_specs=(r, c))
+
+    def _n_shards(self) -> int:
+        axis = self._specs["axis"]
+        if isinstance(axis, tuple):
+            n = 1
+            for a in axis:
+                n *= self.mesh.shape[a]
+            return n
+        return self.mesh.shape[axis]
 
     def __call__(self, params_global, client_stacks, weights=None,
                  mask=None, iters=None, donate=None,
@@ -502,7 +528,7 @@ class ShardedSyncRound(SyncRound):
         if iters is None:        # homogeneous: every client runs full H
             iters = _full_iters(client_stacks)
         iters = np.asarray(iters, np.int32)
-        n_shards = self.mesh.shape[self._specs["axis"]]
+        n_shards = self._n_shards()
         pad = (-n) % n_shards
         if pad:                  # zero-weight dummies round the axis up
             client_stacks = jax.tree_util.tree_map(
@@ -532,4 +558,29 @@ def make_sharded_sync_round(cfg: ModelConfig, fed: FedConfig, mesh=None,
         mesh = make_fleet_mesh()
     return _cached_engine(
         ("shard", mesh), cfg, fed, loss_kwargs,
+        lambda: ShardedSyncRound(cfg, fed, mesh, loss_kwargs))
+
+
+def make_hierarchical_sync_round(cfg: ModelConfig, fed: FedConfig,
+                                 mesh=None, edges: int | None = None,
+                                 loss_kwargs=None) -> ShardedSyncRound:
+    """Sync-round engine over a two-level ``('edge', 'clients')`` mesh:
+    the hierarchical edge-aggregator tree (clients → edge aggregators →
+    server as nested psums — provably the flat weighted average; see
+    ``ShardedSyncRound``).
+
+    Default mesh: this host's devices factored into
+    ``launch.mesh.make_fleet_mesh(edges=...)`` (a 1-device host runs the
+    identical program on a degenerate (1, 1) tree). Memoized like
+    ``make_sharded_sync_round`` with the mesh folded into the key.
+    """
+    if mesh is None:
+        from repro.launch.mesh import make_fleet_mesh
+        mesh = make_fleet_mesh(edges=edges if edges is not None else 0)
+    if not {"edge", "clients"} <= set(mesh.axis_names):
+        raise ValueError(
+            f"hierarchical round needs a ('edge', 'clients') mesh, got "
+            f"axes {mesh.axis_names}")
+    return _cached_engine(
+        ("hier", mesh), cfg, fed, loss_kwargs,
         lambda: ShardedSyncRound(cfg, fed, mesh, loss_kwargs))

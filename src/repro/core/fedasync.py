@@ -16,6 +16,12 @@ iteration, one server mix per receive. The compiled hot path lives in
 concurrent dispatches with per-client H^k batch into one padded vmap
 program (docs/fed_engine.md) — and is tested for float32 parity against
 the loops here.
+
+Nothing here scales with the population: the server state is one model
+plus an epoch counter, and each mix touches one (or one group of)
+received update(s). That is what lets ``core/fleet.py`` drive Algorithm 1
+over 10^6-client streaming populations with only the sampled in-flight
+set resident (docs/fleet.md).
 """
 from __future__ import annotations
 

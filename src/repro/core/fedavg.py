@@ -61,7 +61,7 @@ def _client_weights(n: int, data_sizes: Sequence[int] | None):
 
 
 def fedavg_round(params_global, client_batches: Sequence, cfg: ModelConfig,
-                 fed: FedConfig, engine: fed_engine.SyncRound | None = None,
+                 fed: FedConfig, engine=None,
                  mask=None, data_sizes: Sequence[int] | None = None,
                  donate_params: bool = False):
     """One synchronous round as a single vmap-batched program.
@@ -76,10 +76,22 @@ def fedavg_round(params_global, client_batches: Sequence, cfg: ModelConfig,
     path. Only batch shapes that disagree within or across clients drop to
     the per-client fallback; see ``_ragged_fallback``.
 
+    ``engine``: a ``fed_engine.SyncRound`` instance, ``None`` (the default
+    memoized vmap engine), or an ``core.fleet.EngineSpec`` / its string
+    value — the one validated definition of the engine knob ("loop"
+    routes to ``fedavg_round_loop``).
+
     ``donate_params=True`` lets the engine alias the new global onto
     ``params_global``'s buffers — only pass it when the caller will never
     use ``params_global`` again (e.g. round r > 0 of a training loop).
     """
+    if engine is not None and not isinstance(engine, fed_engine.SyncRound):
+        from repro.core.fleet import EngineSpec
+        spec = EngineSpec.from_str(engine)
+        engine = spec.build_sync(cfg, fed)
+        if engine is None:                  # EngineSpec.LOOP
+            return fedavg_round_loop(params_global, client_batches, cfg,
+                                     fed, mask=mask, data_sizes=data_sizes)
     # materialize up to H batches per client first: iterators may be
     # generators, so raggedness must be detected before anything is lost
     client_lists = [list(itertools.islice(b, fed.local_iters_max))

@@ -1,0 +1,460 @@
+"""Streaming-fleet layer: million-client populations without million-client
+resident state, plus the unified engine selector.
+
+The simulator used to take two parallel positional sequences —
+``fleet: Sequence[DeviceProfile]`` and ``client_data: Sequence[Callable]``
+— which forces every client's loader (and profile, and H^k) to exist up
+front: fine at FedMultimodal scale (~10^3 clients), impossible at the
+10^6-client populations the ROADMAP names. This module replaces that pair
+with one object:
+
+``FleetSpec``
+    A *description* of a population: its size, a seeded device-profile
+    distribution, and a data rule (a shared dataset plus a partition
+    strategy from ``data/partition``, or an arbitrary ``data_fn``). A
+    sampled client's ``DeviceProfile``, loader, and local-iteration budget
+    H^k are all pure seeded functions of the client id — nothing is held
+    resident until a client is actually sampled.
+
+``Fleet``
+    The runtime surface ``run_sync``/``run_async`` consume. Built either
+    ``from_spec`` (streaming: client state materializes on demand into a
+    small cache and is ``release``d when the client leaves the
+    sampled/in-flight set — ``max_resident`` is the asserted memory
+    model) or ``from_lists`` (explicit small fleets; the deprecation shim
+    for the old two-sequence signature routes here). One validated
+    constructor replaces the ad-hoc length checks both entry points used
+    to duplicate.
+
+``EngineSpec``
+    The one definition of the ``engine=`` knob that used to be stringly
+    typed ("scan" | "loop" | "shard", now + "hier") across ``simulator``,
+    ``fedavg`` and ``launch/train.py``. ``from_str`` validates against the
+    accepted set (error messages name the valid options); ``build_sync``
+    maps a member to its round engine.
+
+See docs/fleet.md for sampling semantics, the hierarchy layout, and the
+memory model.
+"""
+from __future__ import annotations
+
+import enum
+import warnings
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Optional, Sequence, Tuple
+
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Device profiles (paper Tables IV/V) — moved here from core/simulator so the
+# fleet layer has no import cycle; simulator re-exports for compatibility.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    name: str
+    # seconds per local epoch, per dataset (paper Table IV)
+    epoch_seconds: float
+    # seconds to evaluate the full test set (paper Table V)
+    test_seconds: float = 0.0
+    # upload latency for one model (seconds); the paper folds this into the
+    # epoch time — kept separate so network heterogeneity can be studied
+    upload_seconds: float = 0.0
+
+
+# Paper Table IV / V — HMDB51 column.
+JETSON_FLEET_HMDB51 = (
+    DeviceProfile("jetson-nano", 391.1, 181.4),
+    DeviceProfile("jetson-tx2", 293.1, 116.3),
+    DeviceProfile("jetson-xavier-nx", 121.3, 89.4),
+    DeviceProfile("jetson-agx-xavier", 84.5, 68.3),
+)
+
+# Paper Table IV / V — UCF101 column.
+JETSON_FLEET_UCF101 = (
+    DeviceProfile("jetson-nano", 2691.6, 621.3),
+    DeviceProfile("jetson-tx2", 2001.4, 381.2),
+    DeviceProfile("jetson-xavier-nx", 821.9, 322.5),
+    DeviceProfile("jetson-agx-xavier", 572.1, 217.7),
+)
+
+
+# ---------------------------------------------------------------------------
+# EngineSpec — the single definition of the engine knob
+# ---------------------------------------------------------------------------
+
+class EngineSpec(enum.Enum):
+    """Client-execution engine selector.
+
+    SCAN   compiled ``lax.scan``/vmap engine (padded masked scan for
+           heterogeneous H^k) — the default everywhere.
+    LOOP   legacy per-iteration dispatch loop; the parity oracle.
+    SHARD  SCAN + the sync round's client axis split over a 1-D
+           ``('clients',)`` device mesh with a flat psum (sync only).
+    HIER   SCAN + a two-level ``('edge', 'clients')`` mesh: clients →
+           edge aggregators → server as a *nested* psum, provably equal
+           to the flat weighted average (sync only).
+    """
+
+    SCAN = "scan"
+    LOOP = "loop"
+    SHARD = "shard"
+    HIER = "hier"
+
+    @classmethod
+    def from_str(cls, value, allowed: Optional[Tuple["EngineSpec", ...]]
+                 = None) -> "EngineSpec":
+        """Validate ``value`` (a string or an EngineSpec) into a member.
+
+        ``allowed`` restricts the accepted subset (e.g. the async path has
+        no fleet-wide round to shard); the error names the valid options.
+        """
+        if isinstance(value, cls):
+            spec = value
+        else:
+            try:
+                spec = cls(value)
+            except ValueError:
+                raise ValueError(
+                    f"engine must be one of "
+                    f"{[m.value for m in cls]}, got {value!r}") from None
+        if allowed is not None and spec not in allowed:
+            raise ValueError(
+                f"engine {spec.value!r} not supported here; valid options: "
+                f"{[m.value for m in allowed]}")
+        return spec
+
+    def build_sync(self, cfg, fed, mesh=None):
+        """The sync-round engine for this member (None for LOOP — the
+        caller owns the per-iteration oracle path)."""
+        from repro.core import fed_engine
+        if self is EngineSpec.SCAN:
+            return fed_engine.make_sync_round(cfg, fed)
+        if self is EngineSpec.SHARD:
+            return fed_engine.make_sharded_sync_round(cfg, fed, mesh=mesh)
+        if self is EngineSpec.HIER:
+            return fed_engine.make_hierarchical_sync_round(cfg, fed,
+                                                           mesh=mesh)
+        return None
+
+
+# engine subsets accepted by the two simulator entry points
+SYNC_ENGINES = (EngineSpec.SCAN, EngineSpec.LOOP, EngineSpec.SHARD,
+                EngineSpec.HIER)
+ASYNC_ENGINES = (EngineSpec.SCAN, EngineSpec.LOOP)
+
+
+# ---------------------------------------------------------------------------
+# FleetSpec — a population described, not materialized
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FleetSpec:
+    """Seeded description of a client population.
+
+    ``profiles`` + ``profile_weights`` is the device-profile distribution:
+    client k's profile is an iid seeded draw (``profile_index``), so two
+    FleetSpecs with the same seed agree client-by-client — sampling and
+    materialization see the same fleet.
+
+    Data: either ``data_fn(k) -> Callable[[], Iterable]`` (full control),
+    or ``dataset`` + ``partition``:
+
+    - ``"shared"``: every client draws its own seeded batch stream from
+      the whole dataset (the only partition that makes sense when the
+      population dwarfs the item count);
+    - ``"iid"``: client k gets ``data.partition.iid_shard(...)`` — the
+      on-demand, bit-identical equivalent of ``iid_partition`` that never
+      allocates the other 10^6 - 1 index lists.
+
+    The local-iteration budget H^k is resource-aware like the legacy
+    fleet's: the profile's speed rank among ``profiles`` maps linearly
+    from H_max (fastest) to H_min (slowest).
+    """
+
+    population: int
+    profiles: Tuple[DeviceProfile, ...]
+    profile_weights: Optional[Tuple[float, ...]] = None
+    seed: int = 0
+    # data rule (one of dataset+partition or data_fn)
+    dataset: Any = None
+    batch_size: int = 4
+    steps: int = 4
+    partition: str = "shared"      # "shared" | "iid"
+    data_fn: Optional[Callable[[int], Callable[[], Iterable]]] = None
+
+    def __post_init__(self):
+        if self.population < 1:
+            raise ValueError(f"population must be >= 1, got "
+                             f"{self.population}")
+        if not self.profiles:
+            raise ValueError("FleetSpec needs at least one DeviceProfile")
+        if self.profile_weights is not None \
+                and len(self.profile_weights) != len(self.profiles):
+            raise ValueError(
+                f"profile_weights ({len(self.profile_weights)}) must match "
+                f"profiles ({len(self.profiles)})")
+        if self.partition not in ("shared", "iid"):
+            raise ValueError(f"partition must be 'shared' or 'iid', got "
+                             f"{self.partition!r}")
+        if self.data_fn is None and self.dataset is None:
+            raise ValueError("FleetSpec needs a dataset or a data_fn")
+
+    # -- per-client draws (pure functions of (spec, k)) ------------------
+    def profile_index(self, k: int) -> int:
+        rng = np.random.default_rng((self.seed, 0x9E37, int(k)))
+        p = None
+        if self.profile_weights is not None:
+            w = np.asarray(self.profile_weights, np.float64)
+            p = w / w.sum()
+        return int(rng.choice(len(self.profiles), p=p))
+
+    def profile(self, k: int) -> DeviceProfile:
+        return self.profiles[self.profile_index(k)]
+
+    def iters(self, k: int, fed) -> int:
+        """H^k from the profile's speed rank among the spec's templates
+        (O(#profiles), not O(population) — no fleet-wide argsort)."""
+        speeds = sorted(p.epoch_seconds for p in self.profiles)
+        rank = speeds.index(self.profiles[self.profile_index(k)]
+                            .epoch_seconds)
+        frac = rank / max(len(self.profiles) - 1, 1)
+        return int(round(fed.local_iters_max
+                         - frac * (fed.local_iters_max
+                                   - fed.local_iters_min)))
+
+    def data(self, k: int, perm: np.ndarray | None = None,
+             visit: int = 0):
+        """Client k's fresh-iterator factory (the ``client_data[k]``
+        contract) for its ``visit``-th sampling — a pure function of
+        (spec, k, visit), which is what makes a streamed fleet
+        bit-identical to its materialized twin under any sampling
+        pattern. ``perm`` optionally reuses the cached IID permutation."""
+        if self.data_fn is not None:
+            return self.data_fn(k)
+        from repro.data import BatchLoader, partition as part
+        indices = None
+        if self.partition == "iid":
+            indices = part.iid_shard(len(self.dataset), self.population,
+                                     int(k), seed=self.seed, perm=perm)
+        seed = int(k) if visit == 0 else int(
+            np.random.default_rng((self.seed, 0xDA7A, int(k), int(visit)))
+            .integers(np.iinfo(np.int64).max))
+        return BatchLoader(self.dataset, self.batch_size, self.steps,
+                           seed=seed, indices=indices)
+
+
+# ---------------------------------------------------------------------------
+# Fleet — the runtime surface
+# ---------------------------------------------------------------------------
+
+class Fleet:
+    """Client population handed to ``run_sync``/``run_async``.
+
+    Two modes share one interface:
+
+    - *resident* (``from_lists``): profiles and loaders are explicit
+      sequences; everything is resident for the run (legacy semantics,
+      including the fleet-wide argsort H^k assignment).
+    - *streaming* (``from_spec``): client state builds on demand from the
+      ``FleetSpec`` into ``_cache`` and is dropped by ``release``;
+      ``max_resident`` is the high-water mark of concurrently
+      materialized clients, which sampled rounds keep at O(sampled) and
+      steady-state async at O(in-flight) — the memory model tests and
+      ``benchmarks/fleet_bench.py`` assert. Each ``data(k)`` call is a
+      fresh loader for that client's next *visit* (``_visits`` keeps one
+      int per ever-visited client — bounded by the dispatch count, never
+      by the population), so the stream is a pure function of
+      (spec, k, visit) and survives release/re-sample bit-identically.
+    """
+
+    def __init__(self, *, population: int, spec: FleetSpec | None = None,
+                 profiles: Sequence[DeviceProfile] | None = None,
+                 client_data: Sequence[Callable[[], Iterable]] | None = None):
+        self.population = int(population)
+        self.spec = spec
+        self._profiles = list(profiles) if profiles is not None else None
+        self._client_data = (list(client_data) if client_data is not None
+                             else None)
+        self._cache: dict = {}       # k -> DeviceProfile (resident state)
+        self._visits: dict = {}      # k -> samplings so far (survives release)
+        self._pinned = False         # materialized twin: release() no-op
+        self.max_resident = 0 if spec is not None else self.population
+        self._iters_cache: dict = {}
+        self._iid_perm: np.ndarray | None = None
+
+    # -- constructors ----------------------------------------------------
+    @classmethod
+    def from_lists(cls, profiles: Sequence[DeviceProfile],
+                   client_data: Sequence[Callable[[], Iterable]]) -> "Fleet":
+        """Explicit small fleet — the validated replacement for the old
+        parallel (fleet, client_data) positional pair."""
+        if len(profiles) != len(client_data):
+            raise ValueError(
+                f"fleet profiles ({len(profiles)}) and client_data "
+                f"({len(client_data)}) must agree")
+        if not len(profiles):
+            raise ValueError("empty fleet")
+        return cls(population=len(profiles), profiles=profiles,
+                   client_data=client_data)
+
+    @classmethod
+    def from_spec(cls, spec: FleetSpec) -> "Fleet":
+        """Streaming fleet: clients materialize on demand."""
+        return cls(population=spec.population, spec=spec)
+
+    @classmethod
+    def resolve(cls, fleet, client_data, fed) -> "Fleet":
+        """The one validated constructor behind both simulator entry
+        points — including the deprecation shim for the old two-sequence
+        signature (kept working for one release)."""
+        if isinstance(fleet, Fleet):
+            if client_data is not None:
+                raise ValueError(
+                    "client_data must be None when passing a Fleet — the "
+                    "Fleet already carries each client's data")
+            out = fleet
+        elif isinstance(fleet, FleetSpec):
+            if client_data is not None:
+                raise ValueError(
+                    "client_data must be None when passing a FleetSpec")
+            out = cls.from_spec(fleet)
+        else:
+            if client_data is None:
+                raise ValueError(
+                    "pass a Fleet/FleetSpec, or the legacy "
+                    "(fleet profiles, client_data) sequence pair")
+            warnings.warn(
+                "run_sync/run_async with parallel fleet/client_data "
+                "sequences is deprecated; pass "
+                "Fleet.from_lists(profiles, client_data) (or a FleetSpec "
+                "for streaming populations) instead",
+                DeprecationWarning, stacklevel=3)
+            out = cls.from_lists(fleet, client_data)
+        if out.population != fed.num_clients:
+            raise ValueError(
+                f"fleet population ({out.population}) and fed.num_clients "
+                f"({fed.num_clients}) must agree")
+        m = getattr(fed, "clients_per_round", 0)
+        if m < 0 or m > out.population:
+            raise ValueError(
+                f"fed.clients_per_round ({m}) must be in "
+                f"[0, population={out.population}]")
+        return out
+
+    # -- streaming <-> resident ------------------------------------------
+    def materialize(self) -> "Fleet":
+        """Resident twin of a streaming fleet: every client's profile
+        built up front and pinned (release is a no-op), small populations
+        only — this is what the bit-identity property tests compare
+        against. Data still flows through the spec's (k, visit) rule, so
+        any sampling pattern sees the exact streams the streaming fleet
+        would."""
+        if self.spec is None:
+            return self
+        out = Fleet(population=self.population, spec=self.spec)
+        for k in range(self.population):
+            out._materialize_client(k)
+        out._pinned = True
+        return out
+
+    def _perm(self):
+        if self.spec is not None and self.spec.partition == "iid" \
+                and self.spec.data_fn is None and self._iid_perm is None:
+            self._iid_perm = np.random.default_rng(
+                self.spec.seed).permutation(len(self.spec.dataset))
+        return self._iid_perm
+
+    def _materialize_client(self, k: int):
+        if k not in self._cache:
+            self._cache[k] = self.spec.profile(k)
+            self.max_resident = max(self.max_resident, len(self._cache))
+        return self._cache[k]
+
+    # -- per-client state ------------------------------------------------
+    def profile(self, k: int) -> DeviceProfile:
+        if self._profiles is not None:
+            return self._profiles[k]
+        return self._materialize_client(k)
+
+    def data(self, k: int) -> Callable[[], Iterable]:
+        """Client k's fresh-iterator factory for its next visit. Spec
+        fleets hand out a new deterministic (spec, k, visit)-seeded
+        loader per call — so streamed and materialized fleets agree
+        bit-for-bit whatever the release pattern; list fleets return the
+        caller's own (stateful) loader, the legacy contract."""
+        if self._client_data is not None:
+            return self._client_data[k]
+        self._materialize_client(k)
+        visit = self._visits.get(k, 0)
+        self._visits[k] = visit + 1
+        return self.spec.data(k, perm=self._perm(), visit=visit)
+
+    def iters(self, k: int, fed) -> int:
+        """Resource-aware H^k ∈ [H_min, H_max].
+
+        Resident list fleets keep the legacy rule (fleet-wide argsort of
+        epoch_seconds, ties broken by position); spec fleets rank the
+        client's *profile* among the spec's templates so no O(population)
+        pass is ever needed.
+        """
+        if self.spec is not None:
+            return self.spec.iters(k, fed)
+        key = (fed.local_iters_min, fed.local_iters_max)
+        if key not in self._iters_cache:
+            order = np.argsort([p.epoch_seconds for p in self._profiles])
+            H = np.empty(self.population, np.int64)
+            for rank, j in enumerate(order):
+                frac = rank / max(self.population - 1, 1)
+                H[int(j)] = int(round(fed.local_iters_max
+                                      - frac * (fed.local_iters_max
+                                                - fed.local_iters_min)))
+            self._iters_cache[key] = H
+        return int(self._iters_cache[key][k])
+
+    @property
+    def resident(self) -> int:
+        """Clients currently holding materialized state."""
+        if self.spec is None:
+            return self.population
+        return len(self._cache)
+
+    def release(self, ks) -> None:
+        """Drop materialized state for clients leaving the sampled /
+        in-flight set (no-op for resident list fleets)."""
+        if self.spec is None or self._pinned:
+            return
+        for k in np.atleast_1d(ks):
+            self._cache.pop(int(k), None)
+
+    # -- sampling --------------------------------------------------------
+    def sample(self, rng: np.random.Generator, m: int,
+               exclude=()) -> np.ndarray:
+        """Draw ``m`` distinct client ids uniformly from the population,
+        excluding ``exclude`` (the in-flight set). O(m) expected for
+        populations that dwarf m (rejection sampling); exact
+        permutation-based draw for small populations."""
+        exclude = set(int(e) for e in exclude)
+        avail = self.population - len(exclude)
+        if m > avail:
+            raise ValueError(
+                f"cannot sample {m} clients from a population of "
+                f"{self.population} with {len(exclude)} excluded")
+        if self.population <= 4 * (m + len(exclude)) + 1024:
+            pool = np.array([k for k in range(self.population)
+                             if k not in exclude], np.int64)
+            return np.asarray(rng.choice(pool, size=m, replace=False),
+                              np.int64)
+        out: list = []
+        seen = set(exclude)
+        while len(out) < m:
+            for d in rng.integers(0, self.population, size=m):
+                d = int(d)
+                if d not in seen:
+                    seen.add(d)
+                    out.append(d)
+                    if len(out) == m:
+                        break
+        return np.asarray(out, np.int64)

@@ -7,6 +7,14 @@ while executing *real* JAX updates on synthetic data. This reproduces both
 the learning dynamics (accuracy curves, staleness distribution) and the
 wall-clock claims (async ≈ 40% faster than sync, Table II).
 
+Fleets are described by ``core.fleet``: a resident ``Fleet.from_lists``
+for small explicit fleets (the paper's four Jetsons), or a streaming
+``FleetSpec`` for populations up to 10^6 clients — a sampled client's
+profile, loader and H^k materialize on demand and are released when the
+client leaves the sampled/in-flight set, so resident state is O(sampled),
+never O(population). Per-round subsampling (sync) and a bounded in-flight
+set (async) are switched by ``fed.clients_per_round``; see docs/fleet.md.
+
 Device profiles are the paper's measurements; custom fleets are supported.
 """
 from __future__ import annotations
@@ -24,38 +32,20 @@ import jax.numpy as jnp
 from repro.core import fed_engine, fedasync, fedavg
 from repro.core.compression import roundtrip
 from repro.core.fedasync import ServerState
+# DeviceProfile and the Jetson fleets live in core/fleet now; re-exported
+# here so existing imports keep working.
+from repro.core.fleet import (ASYNC_ENGINES, SYNC_ENGINES, DeviceProfile,
+                              EngineSpec, Fleet, FleetSpec,
+                              JETSON_FLEET_HMDB51, JETSON_FLEET_UCF101)
 from repro.data.synthetic import stack_batches
 from repro.optim import trainable_mask
 from repro.types import FedConfig, ModelConfig
 
-
-@dataclass(frozen=True)
-class DeviceProfile:
-    name: str
-    # seconds per local epoch, per dataset (paper Table IV)
-    epoch_seconds: float
-    # seconds to evaluate the full test set (paper Table V)
-    test_seconds: float = 0.0
-    # upload latency for one model (seconds); the paper folds this into the
-    # epoch time — kept separate so network heterogeneity can be studied
-    upload_seconds: float = 0.0
-
-
-# Paper Table IV / V — HMDB51 column.
-JETSON_FLEET_HMDB51 = (
-    DeviceProfile("jetson-nano", 391.1, 181.4),
-    DeviceProfile("jetson-tx2", 293.1, 116.3),
-    DeviceProfile("jetson-xavier-nx", 121.3, 89.4),
-    DeviceProfile("jetson-agx-xavier", 84.5, 68.3),
-)
-
-# Paper Table IV / V — UCF101 column.
-JETSON_FLEET_UCF101 = (
-    DeviceProfile("jetson-nano", 2691.6, 621.3),
-    DeviceProfile("jetson-tx2", 2001.4, 381.2),
-    DeviceProfile("jetson-xavier-nx", 821.9, 322.5),
-    DeviceProfile("jetson-agx-xavier", 572.1, 217.7),
-)
+__all__ = [
+    "DeviceProfile", "JETSON_FLEET_HMDB51", "JETSON_FLEET_UCF101",
+    "Fleet", "FleetSpec", "EngineSpec", "TraceEvent", "SimResult",
+    "Scheduler", "run_async", "run_sync", "analytic_speedup",
+]
 
 
 @dataclass
@@ -79,6 +69,9 @@ class SimResult:
     # receive-group sizes drained per window (async): {group_size: count}.
     # window=0 is always {1: global_epochs}.
     group_hist: dict = field(default_factory=dict)
+    # Scheduler heap high-water mark (async): the arrival model's resident
+    # state, asserted O(in-flight) — not O(population) — by the fleet tests.
+    max_inflight: int = 0
 
     @property
     def final_loss(self) -> float:
@@ -111,21 +104,43 @@ class Scheduler:
           started at global epoch t lands at epoch t+i), and
       (c) fits the remaining global-epoch ``budget``.
 
+    ``policy`` decides what happens when an in-window event fails (b):
+    ``"skip"`` (default) leaves it in the queue and keeps scanning — a
+    later in-window receive at *lower* staleness can still legally join
+    the group; ``"stop"`` is the legacy behavior that ended the whole
+    group at the first too-stale event (kept reachable as the parity
+    oracle). A skipped event is not lost: it leads (or joins) a later
+    group, where Algorithm 1's clamp applies as usual.
+
     ``window <= 0`` degenerates to pop-one — exactly the legacy
     event-by-event loop, including its tie handling (two receives sharing
     a finish time still apply as two separate groups).
+
+    This heap is also the population-scale arrival model: only dispatched
+    (in-flight) clients have entries, so a 10^6-client population with an
+    in-flight set of m costs O(m) heap entries — receive interarrivals
+    are drawn from the superposition of the m in-flight clients' virtual
+    finish-time processes, never from per-population state.
+    ``max_inflight`` records the high-water mark (asserted O(in-flight)
+    by the fleet tests and bench).
     """
 
-    def __init__(self, window: float = 0.0):
+    def __init__(self, window: float = 0.0, policy: str = "skip"):
+        if policy not in ("skip", "stop"):
+            raise ValueError(
+                f"policy must be 'skip' or 'stop', got {policy!r}")
         self.window = float(window)
+        self.policy = policy
         self._events: list = []
         self._seq = 0
+        self.max_inflight = 0
 
     def push(self, finish_time: float, client: int, w_new, tau: int,
              loss: float) -> None:
         heapq.heappush(self._events,
                        (finish_time, self._seq, client, w_new, tau, loss))
         self._seq += 1
+        self.max_inflight = max(self.max_inflight, len(self._events))
 
     def __len__(self) -> int:
         return len(self._events)
@@ -141,14 +156,21 @@ class Scheduler:
         group = [(ft, k, w_new, tau, loss)]
         if self.window > 0:
             deadline = ft + self.window
+            skipped = []
             while self._events and len(group) < budget:
-                ft, _, k, w_new, tau, loss = self._events[0]
-                if ft > deadline:
+                if self._events[0][0] > deadline:
                     break
-                if (t + len(group)) - tau > max_staleness:
-                    break        # admitting it would exceed Assumption 3
-                heapq.heappop(self._events)
+                ev = heapq.heappop(self._events)
+                if (t + len(group)) - ev[4] > max_staleness:
+                    # admitting it here would exceed Assumption 3
+                    skipped.append(ev)
+                    if self.policy == "stop":
+                        break        # legacy: first stale event ends group
+                    continue         # skip: a fresher later event may join
+                ft, _, k, w_new, tau, loss = ev
                 group.append((ft, k, w_new, tau, loss))
+            for ev in skipped:
+                heapq.heappush(self._events, ev)
         return group
 
 
@@ -157,15 +179,30 @@ class Scheduler:
 # ---------------------------------------------------------------------------
 
 def run_async(params0, cfg: ModelConfig, fed: FedConfig,
-              fleet: Sequence[DeviceProfile],
-              client_data: Sequence[Callable[[], Iterable]],
+              fleet,
+              client_data: Optional[Sequence[Callable[[], Iterable]]] = None,
               iters_per_epoch: int = 1, jitter: float = 0.0,
               eval_fn: Optional[Callable] = None,
-              eval_every: int = 10, engine: str = "scan",
-              window: float = 0.0) -> SimResult:
+              eval_every: int = 10, engine="scan",
+              window: float = 0.0,
+              window_policy: str = "skip") -> SimResult:
     """Virtual-clock run of asynchronous federated learning.
 
-    client_data[k]() returns a fresh iterator of batches for client k.
+    ``fleet`` is a ``core.fleet.Fleet`` (or a ``FleetSpec``, which is
+    wrapped): each client's ``DeviceProfile``, fresh-iterator factory and
+    H^k come from it. The legacy two-sequence signature —
+    ``fleet: Sequence[DeviceProfile]`` plus ``client_data:
+    Sequence[Callable]`` — still works through a deprecation shim
+    (``Fleet.resolve``) for one release.
+
+    ``fed.clients_per_round`` bounds the *in-flight set*: 0 (default)
+    dispatches the whole population (legacy semantics — every client
+    streams updates forever); m > 0 keeps exactly m clients in flight,
+    sampling each replacement uniformly from the population minus the
+    in-flight set. With a streaming ``FleetSpec`` fleet the resident
+    client state (and the Scheduler heap) then stays O(m) however large
+    the population — receive events arrive from the superposition of the
+    m in-flight clients' finish-time processes.
 
     ``engine``: "scan" (default) runs each client's H local iterations as
     one compiled ``lax.scan`` program (core/fed_engine.py) — one dispatch
@@ -174,14 +211,17 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
     sharing one server state) into a single padded vmap program even
     though each client has its own H^k: stacks pad to H_max and the
     engine's iteration mask absorbs the difference. "loop" is the legacy
-    per-iteration path, kept as a parity oracle. The event-driven virtual
+    per-iteration path, kept as a parity oracle. The accepted set is
+    defined once, in ``core.fleet.EngineSpec``. The event-driven virtual
     clock is identical under both.
 
     ``window`` (virtual seconds) is the staleness-bounded micro-batching
     window: receives finishing within ``window`` of the earliest pending
     one — and whose staleness at their position in the group stays ≤
-    ``fed.max_staleness`` — drain together (``Scheduler.pop_window``).
-    The group applies to the server as ONE fused sequential mix
+    ``fed.max_staleness`` — drain together (``Scheduler.pop_window``;
+    ``window_policy`` picks between skipping a too-stale event, the
+    default, and the legacy stop-at-first behavior). The group applies to
+    the server as ONE fused sequential mix
     (``fedasync.server_receive_many``: a ``lax.scan`` over the stacked
     ``(w_new, β_t)``, preserving Algorithm 1's mixing order), and the
     group's re-dispatches burst through the padded batched engine as ONE
@@ -191,14 +231,11 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
     its next model; ``eval_fn`` granularity also coarsens to group
     boundaries. ``window=0`` (default) is the exact event-by-event loop.
     """
-    if not (len(fleet) == len(client_data) == fed.num_clients):
-        raise ValueError(
-            f"fleet ({len(fleet)}), client_data ({len(client_data)}) and "
-            f"fed.num_clients ({fed.num_clients}) must agree")
-    if engine not in ("scan", "loop"):
-        raise ValueError(f"engine must be 'scan' or 'loop', got {engine!r}")
+    fleet = Fleet.resolve(fleet, client_data, fed)
+    espec = EngineSpec.from_str(engine, allowed=ASYNC_ENGINES)
     rng = np.random.default_rng(fed.seed)
-    if engine == "scan":
+    sample_rng = np.random.default_rng((fed.seed, 0xA51C))
+    if espec is EngineSpec.SCAN:
         run = fed_engine.make_client_run(cfg, fed)
     else:
         step, opt = fedasync.cached_client_step(cfg, fed)
@@ -207,16 +244,14 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
     server = ServerState(params=params0, t=0)
 
     # per-client assigned local iteration counts H^k ∈ [H_min, H_max]:
-    # slower devices get fewer iterations (server's resource-aware choice)
-    order = np.argsort([p.epoch_seconds for p in fleet])
-    H = {}
-    for rank, k in enumerate(order):
-        frac = rank / max(len(fleet) - 1, 1)
-        H[int(k)] = int(round(fed.local_iters_max
-                              - frac * (fed.local_iters_max
-                                        - fed.local_iters_min)))
+    # slower devices get fewer iterations (the server's resource-aware
+    # choice, ``Fleet.iters``) — filled lazily so a sampled run never
+    # touches more than the dispatched clients
+    H: dict = {}
+    inflight: set = set()
+    m_inflight = fed.clients_per_round or fleet.population
 
-    sched = Scheduler(window)
+    sched = Scheduler(window, policy=window_policy)
     trace, history = [], []
     staleness_hist: dict = {}
     group_hist: dict = {}
@@ -227,8 +262,8 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
         batch as one padded program; the per-client path covers the rest
         (single dispatches, the loop oracle, batches that won't pad)."""
         results = {}
-        if engine == "scan":
-            stacks = {k: stack_batches(client_data[k](), limit=H[k])
+        if espec is EngineSpec.SCAN:
+            stacks = {k: stack_batches(fleet.data(k)(), limit=H[k])
                       for k in ks}
             live = [k for k in ks if stacks[k] is not None]
             if len(live) > 1:
@@ -262,13 +297,17 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
         else:
             for k in ks:
                 w_new, _, losses = fedasync.client_update(
-                    server.params, server.t, client_data[k](), cfg, fed,
+                    server.params, server.t, fleet.data(k)(), cfg, fed,
                     step=step, opt=opt, mask=mask, num_iters=H[k])
                 results[k] = (w_new, losses)
         return results
 
     def dispatch(ks, now: float):
         tau = server.t
+        for k in ks:
+            if k not in H:
+                H[k] = fleet.iters(k, fed)
+            inflight.add(k)
         # run the local training NOW (numerically); finish time is virtual
         results = _run_clients(ks)
         for k in ks:
@@ -278,12 +317,17 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
                 # anchor it handed out (communication-efficient FL, §II)
                 w_new, _ = roundtrip(w_new, server.params,
                                      fed.compress_bits)
-            dt = _client_time(fleet[k], H[k], iters_per_epoch, rng, jitter)
+            dt = _client_time(fleet.profile(k), H[k], iters_per_epoch, rng,
+                              jitter)
             sched.push(now + dt, k, w_new, tau,
                        losses[-1] if losses else math.nan)
             trace.append(TraceEvent(now, "dispatch", k, tau))
 
-    dispatch(list(range(fed.num_clients)), 0.0)
+    if m_inflight < fleet.population:
+        kickoff = [int(k) for k in fleet.sample(sample_rng, m_inflight)]
+    else:
+        kickoff = list(range(fleet.population))
+    dispatch(kickoff, 0.0)
 
     now = 0.0
     while server.t < fed.global_epochs and len(sched):
@@ -306,12 +350,29 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
             # the fused mix has no intermediate params: evaluate once at
             # the group boundary (exact per-epoch cadence at window=0)
             eval_fn(server.t, now, server.params)
+        finished = [k for _, k, _, _, _ in group]
         if server.t < fed.global_epochs:
-            dispatch([k for _, k, _, _, _ in group], now)
+            if m_inflight < fleet.population:
+                # population-scale steady state: finished clients leave
+                # the in-flight set (their state is released) and fresh
+                # clients are sampled from the rest of the population
+                inflight.difference_update(finished)
+                for k in finished:
+                    H.pop(k, None)
+                fleet.release(finished)
+                replacements = [int(k) for k in fleet.sample(
+                    sample_rng, len(finished), exclude=inflight)]
+                dispatch(replacements, now)
+            else:
+                dispatch(finished, now)
+        else:
+            inflight.difference_update(finished)
+            if m_inflight < fleet.population:
+                fleet.release(finished)
 
     return SimResult(wall_clock_s=now, history=history, trace=trace,
                      params=server.params, staleness_hist=staleness_hist,
-                     group_hist=group_hist)
+                     group_hist=group_hist, max_inflight=sched.max_inflight)
 
 
 # ---------------------------------------------------------------------------
@@ -319,41 +380,51 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
 # ---------------------------------------------------------------------------
 
 def run_sync(params0, cfg: ModelConfig, fed: FedConfig,
-             fleet: Sequence[DeviceProfile],
-             client_data: Sequence[Callable[[], Iterable]],
+             fleet,
+             client_data: Optional[Sequence[Callable[[], Iterable]]] = None,
              iters_per_epoch: int = 1, jitter: float = 0.0,
              eval_fn: Optional[Callable] = None,
-             eval_every: int = 10, engine: str = "scan") -> SimResult:
+             eval_every: int = 10, engine="scan") -> SimResult:
     """Virtual-clock synchronous FedAvg: each round costs max(client time).
+
+    ``fleet`` is a ``core.fleet.Fleet`` / ``FleetSpec``; the legacy
+    (profiles, client_data) sequence pair still works through the
+    deprecation shim (see ``run_async``).
+
+    ``fed.clients_per_round`` enables per-round client subsampling: each
+    round draws m clients uniformly without replacement, runs them as one
+    padded batched program, and (for streaming fleets) releases their
+    state afterwards — resident state is O(m) whatever the population.
+    A round then advances m global epochs, so
+    ``rounds = max(global_epochs // m, 1)``. 0 (default) runs the whole
+    population every round, the legacy semantics.
 
     ``engine="scan"`` (default) runs every round as one vmap-over-clients
     batched program; ``"shard"`` additionally splits the round's client
     axis over this host's device mesh (``launch.mesh.make_fleet_mesh``)
-    with shard_map, psum-reducing the weighted average across shards;
-    ``"loop"`` is the legacy per-client loop (parity oracle).
+    with shard_map; ``"hier"`` splits it over a two-level
+    ``('edge', 'clients')`` mesh — clients reduce to edge aggregators and
+    edges to the server as a nested psum, numerically the flat weighted
+    average; ``"loop"`` is the legacy per-client loop (parity oracle).
+    The accepted set is defined once, in ``core.fleet.EngineSpec``.
 
     Each round the batched engines donate the incoming global params (the
     new global aliases their buffers; ``params0`` itself is copied once up
     front and never donated), so an ``eval_fn`` must evaluate the params
     it is handed immediately, not stash them for later.
     """
-    if not (len(fleet) == len(client_data) == fed.num_clients):
-        raise ValueError(
-            f"fleet ({len(fleet)}), client_data ({len(client_data)}) and "
-            f"fed.num_clients ({fed.num_clients}) must agree")
-    if engine not in ("scan", "loop", "shard"):
-        raise ValueError(
-            f"engine must be 'scan', 'loop' or 'shard', got {engine!r}")
+    fleet = Fleet.resolve(fleet, client_data, fed)
+    espec = EngineSpec.from_str(engine, allowed=SYNC_ENGINES)
     rng = np.random.default_rng(fed.seed)
-    if engine == "scan":
-        round_engine = fed_engine.make_sync_round(cfg, fed)
-    elif engine == "shard":
-        round_engine = fed_engine.make_sharded_sync_round(cfg, fed)
-    else:
+    sample_rng = np.random.default_rng((fed.seed, 0x5A3D))
+    if espec is EngineSpec.LOOP:
         step, opt = fedasync.cached_client_step(cfg, fed)
+        round_engine = None
+    else:
+        round_engine = espec.build_sync(cfg, fed)
     mask = trainable_mask(params0, fed.trainable)
     params = params0
-    if engine in ("scan", "shard"):
+    if round_engine is not None:
         # defensive copy so EVERY round can donate its params under one
         # jit donation signature (a second signature would re-trace and
         # re-compile the whole round program) while the caller's params0
@@ -361,11 +432,16 @@ def run_sync(params0, cfg: ModelConfig, fed: FedConfig,
         params = jax.tree_util.tree_map(jnp.array, params0)
     now = 0.0
     history, trace = [], []
-    rounds = fed.global_epochs // max(fed.num_clients, 1)
+    m = fed.clients_per_round or fleet.population
+    rounds = fed.global_epochs // max(m, 1)
     rounds = max(rounds, 1)
     for r in range(rounds):
-        batches = [client_data[k]() for k in range(fed.num_clients)]
-        if engine in ("scan", "shard"):
+        if m < fleet.population:
+            ids = [int(k) for k in fleet.sample(sample_rng, m)]
+        else:
+            ids = list(range(fleet.population))
+        batches = [fleet.data(k)() for k in ids]
+        if round_engine is not None:
             # the incoming global (our private copy, or the previous
             # round's output) is dead after this call: donate it so the
             # new global reuses its buffers
@@ -376,9 +452,11 @@ def run_sync(params0, cfg: ModelConfig, fed: FedConfig,
         else:
             params, losses = fedavg.fedavg_round_loop(
                 params, batches, cfg, fed, step=step, opt=opt, mask=mask)
-        dt = max(_client_time(fleet[k], fed.local_iters_max, iters_per_epoch,
-                              rng, jitter)
-                 for k in range(fed.num_clients))
+        dt = max(_client_time(fleet.profile(k), fed.local_iters_max,
+                              iters_per_epoch, rng, jitter)
+                 for k in ids)
+        if m < fleet.population:
+            fleet.release(ids)
         now += dt
         loss = float(np.mean([l[-1] for l in losses if l]))
         history.append((now, r + 1, loss))

@@ -14,6 +14,29 @@ def iid_partition(num_items: int, num_clients: int, seed: int = 0):
     return [np.sort(s) for s in np.array_split(perm, num_clients)]
 
 
+def iid_shard(num_items: int, num_clients: int, client: int, seed: int = 0,
+              perm: np.ndarray | None = None):
+    """ONE client's IID shard, without materializing every client's list.
+
+    Bit-identical to ``iid_partition(num_items, num_clients, seed)[client]``
+    but O(num_items) instead of O(num_items + num_clients) — the streaming
+    fleet (``core.fleet.FleetSpec``) materializes a sampled client's shard
+    on demand, so a 10^6-client population never allocates 10^6 index
+    arrays. ``perm`` lets a caller reuse the (dataset-sized, population-
+    independent) permutation across clients instead of re-drawing it.
+    """
+    if not 0 <= client < num_clients:
+        raise ValueError(f"client {client} outside [0, {num_clients})")
+    if perm is None:
+        perm = np.random.default_rng(seed).permutation(num_items)
+    # np.array_split boundaries: the first (num_items % num_clients) shards
+    # get one extra item
+    q, r = divmod(num_items, num_clients)
+    start = client * q + min(client, r)
+    stop = start + q + (1 if client < r else 0)
+    return np.sort(perm[start:stop])
+
+
 def dirichlet_partition(labels: np.ndarray, num_clients: int,
                         alpha: float = 0.5, seed: int = 0):
     """Class-skewed split; alpha→∞ recovers IID, alpha→0 one-class clients."""

@@ -19,13 +19,29 @@ def make_host_mesh():
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
-def make_fleet_mesh(n: int | None = None):
-    """1-D ``('clients',)`` mesh for the sharded federated sync round.
+def make_fleet_mesh(n: int | None = None, edges: int | None = None):
+    """Mesh for the sharded federated sync round.
 
-    The round's client axis splits across it (core/fed_engine.py
-    ``ShardedSyncRound``; specs in ``sharding.specs.fed_round_specs``).
-    Defaults to every device this host has — CPU tests get a 1-device
-    mesh, which runs the identical shard_map program unsharded.
+    Default (``edges=None``): the 1-D ``('clients',)`` mesh — the round's
+    client axis splits across it (core/fed_engine.py ``ShardedSyncRound``;
+    specs in ``sharding.specs.fed_round_specs``). Defaults to every device
+    this host has — CPU tests get a 1-device mesh, which runs the
+    identical shard_map program unsharded.
+
+    ``edges`` requests the two-level ``('edge', 'clients')`` mesh of the
+    hierarchical edge-aggregator tree: ``edges`` edge aggregators, each
+    owning ``n // edges`` client shards (clients psum to their edge, edges
+    psum to the server — ``make_hierarchical_sync_round``). ``edges=0``
+    picks the largest divisor of the device count ≤ its square root (a
+    1-device host degenerates to the (1, 1) tree, same program).
     """
     n = n or len(jax.devices())
-    return jax.make_mesh((n,), ("clients",))
+    if edges is None:
+        return jax.make_mesh((n,), ("clients",))
+    if edges == 0:
+        edges = max(e for e in range(1, int(n ** 0.5) + 1) if n % e == 0)
+    if edges < 1 or n % edges:
+        raise ValueError(
+            f"edges ({edges}) must be a positive divisor of the device "
+            f"count ({n})")
+    return jax.make_mesh((edges, n // edges), ("edge", "clients"))

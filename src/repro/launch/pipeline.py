@@ -31,6 +31,7 @@ import jax
 
 from repro.configs import get_config
 from repro.core import distill, simulator
+from repro.core.fleet import Fleet
 from repro.data import BatchLoader, iid_partition, make_dataset_for
 from repro.launch.train import build_fleet
 from repro.models import registry
@@ -54,15 +55,15 @@ def _finetune(params, cfg: ModelConfig, fed: FedConfig, ds, batch: int,
               mode: str, engine: str, seed: int):
     """Stage 2: federated fine-tune from ``params`` over an iid partition
     of the clients' reduced local dataset."""
-    fleet = build_fleet(fed.num_clients)
     parts = iid_partition(max(len(ds), fed.num_clients * 8),
                           fed.num_clients, seed=seed) \
         if hasattr(ds, "__len__") else [None] * fed.num_clients
     data = [BatchLoader(ds, batch, steps=fed.local_iters_max,
                         seed=k, indices=parts[k])
             for k in range(fed.num_clients)]
+    fleet = Fleet.from_lists(build_fleet(fed.num_clients), data)
     run = simulator.run_async if mode == "async" else simulator.run_sync
-    res = run(params, cfg, fed, fleet, data, engine=engine)
+    res = run(params, cfg, fed, fleet, engine=engine)
     return res
 
 

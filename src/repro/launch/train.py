@@ -26,7 +26,8 @@ import jax.numpy as jnp
 from repro.checkpoint import save_params
 from repro.configs import get_config
 from repro.core import distill, simulator
-from repro.core.simulator import JETSON_FLEET_HMDB51
+from repro.core.fleet import (ASYNC_ENGINES, EngineSpec, Fleet, FleetSpec,
+                              JETSON_FLEET_HMDB51)
 from repro.data import BatchLoader, iid_partition, make_dataset_for
 from repro.models import registry
 from repro.types import DistillConfig, FedConfig
@@ -48,6 +49,15 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=50,
                     help="steps (central mode)")
     ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--population", type=int, default=0,
+                    help="total fleet population (streaming FleetSpec, "
+                         "core/fleet.py): clients materialize on demand, "
+                         "so this can be 10^6. 0 = resident fleet of "
+                         "--clients devices (legacy)")
+    ap.add_argument("--clients-per-round", type=int, default=0,
+                    help="per-round subsample size m: sync draws m clients "
+                         "per round, async keeps m in flight. 0 = the "
+                         "whole population every round (legacy)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--beta", type=float, default=0.7)
@@ -55,13 +65,15 @@ def main(argv=None):
     ap.add_argument("--theta", type=float, default=0.01)
     ap.add_argument("--trainable", choices=["all", "last_layer"],
                     default="all")
-    ap.add_argument("--engine", choices=["scan", "loop", "shard"],
+    ap.add_argument("--engine", choices=[e.value for e in EngineSpec],
                     default="scan",
                     help="client execution: compiled lax.scan/vmap engine "
                          "(heterogeneous H^k batches via the padded "
                          "masked scan), 'shard' to additionally split the "
                          "sync round's client axis over this host's "
-                         "devices (sync mode only), or the legacy "
+                         "devices, 'hier' for the two-level edge-"
+                         "aggregator tree over the ('edge','clients') "
+                         "mesh (both sync-only), or the legacy "
                          "per-iteration loop")
     ap.add_argument("--async-window", type=float, default=0.0,
                     help="staleness-bounded micro-batching window W in "
@@ -105,10 +117,13 @@ def main(argv=None):
             print(f"  KD {st.teacher} -> {st.student}: "
                   f"acc={st.accuracy:.3f} ({st.wall_time_s:.1f}s)")
 
-    fed = FedConfig(num_clients=args.clients, global_epochs=args.epochs,
+    population = args.population or args.clients
+    fed = FedConfig(num_clients=population, global_epochs=args.epochs,
                     mixing_beta=args.beta, staleness_a=args.a,
                     prox_theta=args.theta, lr=args.lr,
-                    trainable=args.trainable, seed=args.seed)
+                    trainable=args.trainable,
+                    clients_per_round=args.clients_per_round,
+                    seed=args.seed)
     ds = make_dataset_for(cfg, small=True, seed=args.seed + 1)
     t0 = time.time()
 
@@ -128,25 +143,36 @@ def main(argv=None):
         result = {"mode": "central", "final_loss": float(loss),
                   "wall_s": time.time() - t0}
     else:
-        fleet = build_fleet(args.clients)
-        parts = iid_partition(max(len(ds), args.clients * 8), args.clients,
-                              seed=args.seed) \
-            if hasattr(ds, "__len__") else [None] * args.clients
-        data = [BatchLoader(ds, args.batch, steps=fed.local_iters_max,
-                            seed=k, indices=parts[k])
-                for k in range(args.clients)]
+        if args.population:
+            # streaming fleet: clients (profile, shard, H^k) materialize on
+            # demand, so resident state is O(sampled), not O(population)
+            fleet = Fleet.from_spec(FleetSpec(
+                population=population, profiles=JETSON_FLEET_HMDB51,
+                dataset=ds, batch_size=args.batch,
+                steps=fed.local_iters_max, seed=args.seed,
+                partition="shared"))
+        else:
+            profiles = build_fleet(args.clients)
+            parts = iid_partition(max(len(ds), args.clients * 8),
+                                  args.clients, seed=args.seed) \
+                if hasattr(ds, "__len__") else [None] * args.clients
+            data = [BatchLoader(ds, args.batch, steps=fed.local_iters_max,
+                                seed=k, indices=parts[k])
+                    for k in range(args.clients)]
+            fleet = Fleet.from_lists(profiles, data)
         run = simulator.run_async if args.mode == "async" \
             else simulator.run_sync
         eng = args.engine
-        if args.mode == "async" and eng == "shard":
+        if args.mode == "async" \
+                and EngineSpec.from_str(eng) not in ASYNC_ENGINES:
             # the async path has no fleet-wide round to shard; its bursts
             # batch through the padded vmap program instead
-            print("  engine=shard is sync-only; async uses engine=scan")
+            print(f"  engine={eng} is sync-only; async uses engine=scan")
             eng = "scan"
         kwargs = {}
         if args.mode == "async":
             kwargs["window"] = args.async_window
-        res = run(params, cfg, fed, fleet, data, engine=eng, **kwargs)
+        res = run(params, cfg, fed, fleet, engine=eng, **kwargs)
         params = res.params
         print(f"  virtual wall-clock {res.wall_clock_s:.0f}s "
               f"final loss {res.final_loss:.4f}")

@@ -47,7 +47,17 @@ def fed_round_specs(mesh: Mesh) -> dict:
     the mesh's client axis, and fleet-global arrays (params, trainable
     mask, the psum'ed new global) which replicate. Specs are pytree
     prefixes: ``P(axis)`` shards only the leading dim of every leaf.
+
+    On the hierarchical ``('edge', 'clients')`` mesh
+    (``launch.mesh.make_fleet_mesh(edges=...)``) the leading client dim
+    shards over BOTH axes — shard (e, c) holds the clients of edge
+    aggregator e's c-th slot — and ``axis`` is the ``('edge', 'clients')``
+    tuple, outermost first, so the round can reduce level by level
+    (clients → edge, edge → server).
     """
+    if {"edge", "clients"} <= set(mesh.axis_names):
+        axis = ("edge", "clients")
+        return {"axis": axis, "clients": P(axis), "replicated": P()}
     axis = "clients" if "clients" in mesh.axis_names else mesh.axis_names[0]
     return {"axis": axis, "clients": P(axis), "replicated": P()}
 

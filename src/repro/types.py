@@ -228,6 +228,10 @@ class FedConfig:
     max_staleness: int = 16           # K (Assumption 3)
     trainable: str = "all"            # "all" | "last_layer" (paper fine-tunes FC)
     compress_bits: int = 0            # 0 = off; 8 = int8 delta updates
+    # per-round client subsampling (population-scale fleets, core/fleet.py):
+    # sync draws this many clients per round; async keeps this many in
+    # flight. 0 = whole population every round (legacy semantics).
+    clients_per_round: int = 0
     seed: int = 0
 
     @property

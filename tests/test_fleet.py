@@ -1,0 +1,338 @@
+"""Streaming-fleet layer (core/fleet.py): the million-client claims.
+
+Property tests pinning the PR's contracts:
+  * a streamed ``FleetSpec`` fleet is bit-identical to the same fleet
+    fully materialized (sampling, H^k assignment, and shards are pure
+    functions of (spec, k));
+  * the hierarchical edge-aggregator round equals the flat psum weighted
+    average (exact on a single-shard mesh, float32-close under real
+    sharding) for ragged H^k counts and zero-weight padding clients;
+  * resident state is O(sampled/in-flight), not O(population), at a
+    10^6-client population;
+  * the deprecation shim keeps the legacy parallel ``fleet``/
+    ``client_data`` signature working (with a warning) and equal to the
+    ``Fleet`` object path;
+  * every ``engine=`` string resolves through the one validated
+    ``EngineSpec`` definition;
+  * ``Scheduler.pop_window`` policy="skip" admits a fresher later event
+    where the legacy "stop" oracle ended the group.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import RESNET18
+from repro.core import fed_engine, fedavg, simulator
+from repro.core.fleet import (ASYNC_ENGINES, SYNC_ENGINES, EngineSpec,
+                              Fleet, FleetSpec, JETSON_FLEET_HMDB51)
+from repro.core.simulator import Scheduler
+from repro.data import BatchLoader, SyntheticActionDataset, iid_partition
+from repro.data.partition import iid_shard
+from repro.models import registry
+from repro.types import FedConfig
+
+
+def tree_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-5):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = RESNET18.reduced()
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    ds = SyntheticActionDataset(num_classes=8, samples_per_class=8, seed=1)
+    return cfg, params, ds
+
+
+def small_spec(ds, population=4, partition="iid"):
+    return FleetSpec(population=population, profiles=JETSON_FLEET_HMDB51,
+                     dataset=ds, batch_size=4, steps=4, seed=3,
+                     partition=partition)
+
+
+# ---------------------------------------------------------------------------
+# FleetSpec determinism / iid_shard
+# ---------------------------------------------------------------------------
+
+def test_iid_shard_matches_iid_partition():
+    parts = iid_partition(37, 5, seed=9)
+    for k in range(5):
+        np.testing.assert_array_equal(iid_shard(37, 5, k, seed=9),
+                                      np.sort(parts[k]))
+    with pytest.raises(ValueError):
+        iid_shard(37, 5, 5)
+
+
+def test_spec_is_deterministic_and_validated(tiny):
+    _, _, ds = tiny
+    spec = small_spec(ds, population=100)
+    ks = [0, 1, 57, 99]
+    assert [spec.profile_index(k) for k in ks] == \
+           [spec.profile_index(k) for k in ks]
+    fed = FedConfig(num_clients=100, local_iters_min=1, local_iters_max=4)
+    for k in ks:
+        h = spec.iters(k, fed)
+        assert fed.local_iters_min <= h <= fed.local_iters_max
+    with pytest.raises(ValueError):
+        small_spec(ds, population=0)
+    with pytest.raises(ValueError):
+        dataclasses.replace(spec, partition="dirichlet")
+
+
+def test_fleet_sample_exact_and_rejection():
+    f = Fleet.from_spec(FleetSpec(
+        population=10**6, profiles=JETSON_FLEET_HMDB51,
+        dataset=SyntheticActionDataset(num_classes=4, samples_per_class=4),
+        partition="shared"))
+    rng = np.random.default_rng(0)
+    s = f.sample(rng, 64, exclude=range(32))
+    assert len(s) == len(set(s.tolist())) == 64
+    assert not set(s.tolist()) & set(range(32))
+    # small population takes the exact rng.choice path
+    g = Fleet.from_spec(small_spec(
+        SyntheticActionDataset(num_classes=4, samples_per_class=4),
+        population=8, partition="shared"))
+    s2 = g.sample(np.random.default_rng(0), 8)
+    assert sorted(s2.tolist()) == list(range(8))
+
+
+# ---------------------------------------------------------------------------
+# Streamed == materialized (the tentpole's bit-identity contract)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_streamed_equals_materialized_sync(tiny):
+    cfg, params, ds = tiny
+    fed = FedConfig(num_clients=4, global_epochs=8, local_iters_min=1,
+                    local_iters_max=2, lr=0.05, clients_per_round=2, seed=5)
+    spec = small_spec(ds)
+    ra = simulator.run_sync(params, cfg, fed, Fleet.from_spec(spec))
+    rb = simulator.run_sync(params, cfg, fed,
+                            Fleet.from_spec(spec).materialize())
+    tree_equal(ra.params, rb.params)
+    assert ra.history == rb.history
+
+
+@pytest.mark.slow
+def test_streamed_equals_materialized_async(tiny):
+    cfg, params, ds = tiny
+    fed = FedConfig(num_clients=4, global_epochs=8, local_iters_min=1,
+                    local_iters_max=2, lr=0.05, clients_per_round=2, seed=5)
+    spec = small_spec(ds)
+    ra = simulator.run_async(params, cfg, fed, Fleet.from_spec(spec))
+    rb = simulator.run_async(params, cfg, fed,
+                             Fleet.from_spec(spec).materialize())
+    tree_equal(ra.params, rb.params)
+    assert ra.staleness_hist == rb.staleness_hist
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical aggregation == flat weighted average
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_hierarchical_equals_flat_ragged_and_zero_weight(tiny):
+    """Σ_e Σ_{k∈e} w_k·θ_k = Σ_k w_k·θ_k for ragged H^k counts plus a
+    zero-weight client, on whatever mesh this host factors into."""
+    cfg, params, ds = tiny
+    fed = FedConfig(num_clients=5, local_iters_min=1, local_iters_max=3,
+                    lr=0.05)
+    # ragged counts 3,1,2,3,1 + zero weight on client 4
+    counts = [3, 1, 2, 3, 1]
+    data = [list(ds.batches(4, counts[k], seed=k)) for k in range(5)]
+    sizes = [32, 8, 16, 32, 0]
+    g_flat, l_flat = fedavg.fedavg_round(params, data, cfg, fed,
+                                         engine="scan", data_sizes=sizes)
+    data = [list(ds.batches(4, counts[k], seed=k)) for k in range(5)]
+    g_hier, l_hier = fedavg.fedavg_round(params, data, cfg, fed,
+                                         engine="hier", data_sizes=sizes)
+    data = [list(ds.batches(4, counts[k], seed=k)) for k in range(5)]
+    g_shard, _ = fedavg.fedavg_round(params, data, cfg, fed,
+                                     engine="shard", data_sizes=sizes)
+    if len(jax.devices()) == 1:
+        tree_equal(g_flat, g_hier)      # one shard: psum is the identity
+        tree_equal(g_shard, g_hier)
+        for a, b in zip(l_flat, l_hier):
+            np.testing.assert_array_equal(a, b)
+    else:
+        # real sharding: XLA picks reduction/fusion order per mesh —
+        # float32-close, same tolerance as the existing shard-vs-loop
+        # engine parity test
+        tree_allclose(g_flat, g_hier, rtol=1e-3, atol=1e-4)
+        tree_allclose(g_shard, g_hier, rtol=1e-3, atol=1e-4)
+        for a, b in zip(l_flat, l_hier):
+            np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+def test_hierarchical_mesh_validation():
+    from repro.launch.mesh import make_fleet_mesh
+    cfg = RESNET18.reduced()
+    fed = FedConfig(num_clients=4)
+    flat = make_fleet_mesh()
+    with pytest.raises(ValueError):
+        fed_engine.make_hierarchical_sync_round(cfg, fed, mesh=flat)
+    n = len(jax.devices())
+    with pytest.raises(ValueError):
+        make_fleet_mesh(n, edges=n + 1)
+    mesh = make_fleet_mesh(edges=0)
+    assert set(mesh.axis_names) == {"edge", "clients"}
+
+
+# ---------------------------------------------------------------------------
+# Million-client resident state
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_million_client_sync_resident_is_o_sampled(tiny):
+    cfg, params, ds = tiny
+    fed = FedConfig(num_clients=10**6, global_epochs=8, local_iters_min=1,
+                    local_iters_max=2, lr=0.05, clients_per_round=4)
+    fleet = Fleet.from_spec(FleetSpec(
+        population=10**6, profiles=JETSON_FLEET_HMDB51, dataset=ds,
+        batch_size=4, steps=4, partition="shared"))
+    res = simulator.run_sync(params, cfg, fed, fleet)
+    assert len(res.history) == 2            # 8 epochs / 4 per round
+    assert fleet.max_resident <= fed.clients_per_round
+    assert fleet.resident == 0              # released after each round
+
+
+@pytest.mark.slow
+def test_million_client_async_resident_is_o_inflight(tiny):
+    cfg, params, ds = tiny
+    fed = FedConfig(num_clients=10**6, global_epochs=10, local_iters_min=1,
+                    local_iters_max=2, lr=0.05, clients_per_round=4)
+    fleet = Fleet.from_spec(FleetSpec(
+        population=10**6, profiles=JETSON_FLEET_HMDB51, dataset=ds,
+        batch_size=4, steps=4, partition="shared"))
+    res = simulator.run_async(params, cfg, fed, fleet)
+    assert len(res.history) == fed.global_epochs
+    assert fleet.max_resident <= fed.clients_per_round
+    assert res.max_inflight <= fed.clients_per_round
+
+
+# ---------------------------------------------------------------------------
+# Satellite: deprecation shim for the legacy parallel-args signature
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_legacy_signature_warns_and_matches_fleet_object(tiny):
+    cfg, params, ds = tiny
+    fed = FedConfig(num_clients=4, global_epochs=6, local_iters_min=1,
+                    local_iters_max=2, lr=0.05)
+    parts = iid_partition(len(ds), 4)
+
+    def loaders():
+        return [BatchLoader(ds, 4, steps=4, seed=k, indices=parts[k])
+                for k in range(4)]
+
+    with pytest.warns(DeprecationWarning, match="Fleet.from_lists"):
+        r_old = simulator.run_sync(params, cfg, fed, JETSON_FLEET_HMDB51,
+                                   loaders())
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        r_new = simulator.run_sync(
+            params, cfg, fed,
+            Fleet.from_lists(JETSON_FLEET_HMDB51, loaders()))
+    tree_equal(r_old.params, r_new.params)
+
+
+def test_resolve_validation(tiny):
+    cfg, params, ds = tiny
+    fed = FedConfig(num_clients=4)
+    f = Fleet.from_spec(small_spec(ds))
+    with pytest.raises(ValueError):      # client_data alongside a Fleet
+        Fleet.resolve(f, [lambda: []], fed)
+    with pytest.raises(ValueError):      # population != num_clients
+        Fleet.resolve(Fleet.from_spec(small_spec(ds, population=8)),
+                      None, fed)
+    with pytest.raises(ValueError):      # oversubscribed sampling
+        Fleet.resolve(f, None,
+                      dataclasses.replace(fed, clients_per_round=9))
+    with pytest.raises(ValueError):      # ragged lists
+        Fleet.from_lists(JETSON_FLEET_HMDB51[:3], [lambda: []] * 4)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: one validated EngineSpec
+# ---------------------------------------------------------------------------
+
+def test_engine_spec_from_str():
+    assert EngineSpec.from_str("scan") is EngineSpec.SCAN
+    assert EngineSpec.from_str(EngineSpec.HIER) is EngineSpec.HIER
+    with pytest.raises(ValueError, match="scan.*loop.*shard.*hier"):
+        EngineSpec.from_str("turbo")
+    with pytest.raises(ValueError, match="not supported here"):
+        EngineSpec.from_str("shard", allowed=ASYNC_ENGINES)
+    assert set(SYNC_ENGINES) == set(EngineSpec)
+
+
+def test_simulator_rejects_invalid_engines(tiny):
+    cfg, params, ds = tiny
+    fed = FedConfig(num_clients=4, global_epochs=4)
+    fleet = Fleet.from_spec(small_spec(ds, partition="shared"))
+    with pytest.raises(ValueError, match="one of"):
+        simulator.run_sync(params, cfg, fed, fleet, engine="bogus")
+    with pytest.raises(ValueError, match="not supported here"):
+        simulator.run_async(params, cfg, fed, fleet, engine="hier")
+    with pytest.raises(ValueError, match="one of"):
+        fedavg.fedavg_round(params, [], cfg, fed, engine="bogus")
+
+
+# ---------------------------------------------------------------------------
+# Satellite: pop_window skip-vs-stop group composition
+# ---------------------------------------------------------------------------
+
+def _push(sched, ft, client, tau):
+    sched.push(ft, client, {"w": np.zeros(1)}, tau, 0.0)
+
+
+def test_pop_window_skip_admits_fresher_later_event():
+    """A too-stale event no longer ends the group: the fresher event
+    behind it still joins, and the stale one survives for a later group
+    (where Algorithm 1's clamp applies)."""
+    # group leader at t=10; event B too stale at position 1; C is fresh
+    events = [(1.0, 0, 10), (1.5, 1, 2), (2.0, 2, 10)]
+    t, K = 10, 8
+
+    skip = Scheduler(window=5.0, policy="skip")
+    for ft, k, tau in events:
+        _push(skip, ft, k, tau)
+    group = skip.pop_window(t, K, budget=10)
+    assert [g[1] for g in group] == [0, 2]   # B skipped, C admitted
+    assert len(skip) == 1                     # B still queued
+    assert skip.pop_window(t + 2, K, budget=10)[0][1] == 1
+
+    stop = Scheduler(window=5.0, policy="stop")
+    for ft, k, tau in events:
+        _push(stop, ft, k, tau)
+    group = stop.pop_window(t, K, budget=10)
+    assert [g[1] for g in group] == [0]       # legacy: B ended the group
+    # B pushed back, C never popped — both still queued
+    assert len(stop) == 2
+    with pytest.raises(ValueError):
+        Scheduler(policy="drop")
+
+
+def test_pop_window_group_staleness_bound_still_holds():
+    sched = Scheduler(window=100.0, policy="skip")
+    rng = np.random.default_rng(0)
+    for i in range(32):
+        _push(sched, float(rng.uniform(0, 50)), i, int(rng.integers(0, 20)))
+    t, K = 25, 6
+    while len(sched):
+        group = sched.pop_window(t, K, budget=8)
+        assert 1 <= len(group) <= 8
+        for i, (_, _, _, tau, _) in enumerate(group):
+            assert (t + i) - tau <= K or i == 0   # leader clamps instead
+        t += len(group)
