@@ -18,6 +18,8 @@ from __future__ import annotations
 import json
 import time
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -157,6 +159,11 @@ def fed_engine_bench(H: int = 32, n_clients: int = 8,
     rows.extend(rows_w)
     report["async_window_sweep"] = report_w
 
+    # -- pluggable algorithms through the padded round -------------------
+    rows_a, report_a = _algorithm_sweep(cfg, n_clients=n_clients)
+    rows.extend(rows_a)
+    report["algorithms"] = report_a
+
     if out_json:
         with open(out_json, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
@@ -234,6 +241,84 @@ def _window_sweep(cfg: ModelConfig, n_clients: int = 8,
                                for k, v in
                                sorted(res.staleness_hist.items())},
             "speedup_vs_window0": speedup})
+    return rows, report
+
+
+def _algorithm_sweep(cfg: ModelConfig, n_clients: int = 8):
+    """Pluggable FedAlgorithm layer (core/algorithms.py): round throughput
+    and uplink cost per algorithm.
+
+    Throughput: one heterogeneous-H^k padded round (the batched program)
+    vs the per-iteration loop oracle — stateful algorithms (SCAFFOLD's
+    control variates, the low-rank submodel's capacity state) must keep
+    the one-program-per-round-shape property, so their steps/s should sit
+    near FedProx's, not near the loop's. Wire: per-round uplink bytes at
+    the int8 delta codec (``fed.compress_bits=8``, the matched-width
+    comparison) — the low-rank factors are the only payload expected to
+    undercut the dense int8 delta.
+    """
+    import dataclasses
+
+    from repro.core import algorithms, compression
+
+    print(f"  algorithm sweep ({n_clients} clients)")
+    fed = FedConfig(num_clients=n_clients, lr=0.01, local_iters_min=1,
+                    local_iters_max=3)
+    fed8 = dataclasses.replace(fed, compress_bits=8)
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    ds = SyntheticLMDataset(vocab=cfg.vocab_size, seq_len=8, seed=0)
+    mask = trainable_mask(params, fed.trainable)
+    rng_H = [fed.local_iters_min
+             + (k * 7919) % (fed.local_iters_max - fed.local_iters_min + 1)
+             for k in range(n_clients)]
+    het = [list(ds.batches(1, h, seed=200 + k))
+           for k, h in enumerate(rng_H)]
+    steps = sum(rng_H)
+    dense_f32 = sum(int(np.prod(l.shape)) * 4
+                    for l in jax.tree_util.tree_leaves(params))
+
+    rows, report = [], {}
+    for name in sorted(algorithms.ALGORITHMS):
+        alg = algorithms.make_algorithm(name)
+
+        def padded_round(alg=alg):
+            g, _ = fedavg.fedavg_round(params, [iter(b) for b in het],
+                                       cfg, fed, mask=mask, algorithm=alg)
+            return g
+
+        def loop_round(alg=alg):
+            g, _ = fedavg.fedavg_round_loop(params, [iter(b) for b in het],
+                                            cfg, fed, mask=mask,
+                                            algorithm=alg)
+            return g
+
+        t_p = _timeit(padded_round, iters=10)
+        t_l = _timeit(loop_round, iters=10)
+
+        # uplink: one client update, encoded at the matched int8 width
+        w_new, _, msg, _ = algorithms.client_update_loop(
+            params, het[0], cfg, fed8, alg, client_id=0, mask=mask,
+            server_ctx=alg.ctx_for(params))
+        wire = alg.encode(w_new, msg, params, fed8).wire_bytes
+        dense8 = compression.quantize_delta(w_new, params, 8).wire_bytes
+
+        rows.append((f"fed_alg_{name}_padded", t_p / steps * 1e6,
+                     f"{steps / t_p:.0f}_steps_per_s_"
+                     f"speedup={t_l / t_p:.2f}x_vs_loop"))
+        rows.append((f"fed_alg_{name}_wire", float(wire),
+                     f"bytes_per_client_int8_"
+                     f"ratio={wire / dense8:.3f}_vs_dense_int8"))
+        print(f"    {name:8s}: padded {steps / t_p:7.0f} steps/s | loop "
+              f"{steps / t_l:7.0f} steps/s | wire {wire} B "
+              f"({wire / dense8:.3f}x dense int8)")
+        report[name] = {
+            "padded_steps_per_s": steps / t_p,
+            "loop_steps_per_s": steps / t_l,
+            "speedup": t_l / t_p,
+            "wire_bytes_per_client_int8": wire,
+            "dense_int8_bytes": dense8,
+            "dense_f32_bytes": dense_f32,
+            "wire_ratio_vs_dense_int8": wire / dense8}
     return rows, report
 
 

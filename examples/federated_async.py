@@ -71,3 +71,23 @@ for eng in ("scan", "loop"):
 print(f"\nhost wall-clock, E=16: scan engine {walls['scan']:.2f}s vs "
       f"legacy loop {walls['loop']:.2f}s "
       f"({walls['loop']/walls['scan']:.2f}x)")
+
+# algorithm comparison (core/algorithms.py, docs/algorithms.md): the same
+# async run with the algorithm swapped behind the engines. SCAFFOLD
+# carries control variates against client drift (its variate delta rides
+# the staleness-damped mix); the low-rank/masked-submodel algorithm ships
+# capacity-scaled compressed updates — its wire bytes shrink with device
+# capacity while the engine still compiles ONE round program.
+from repro.core.algorithms import LowRankSubmodel, make_algorithm
+
+print("\nalgorithms, a=0.5:")
+for name in ("fedprox", "scaffold", "lowrank"):
+    alg = make_algorithm(name)
+    res = simulator.run_async(params, cfg, make_fed(0.5), make_fleet(),
+                              algorithm=alg)
+    tail = float(np.mean([l for _, _, l in res.history[-6:]]))
+    extra = ""
+    if isinstance(alg, LowRankSubmodel):
+        extra = (f"  client capacities "
+                 f"{[round(alg.capacity_for(k), 3) for k in range(4)]}")
+    print(f"  {name:8s}: tail loss {tail:.4f}{extra}")

@@ -1,0 +1,665 @@
+"""Pluggable federated-algorithm layer: the four things the engines used
+to hardcode, extracted behind one interface.
+
+``core/fed_engine.py`` compiles *execution* — scans, padded masked scans,
+vmap rounds, shard_map reductions. What used to be welded into those
+programs is the *algorithm*: the per-iteration local update rule
+(proximal SGD), the client-carried state (none), the server fold (a
+weighted average / the staleness mix), and the wire codec (int8 deltas).
+``FedAlgorithm`` owns those four pieces:
+
+``client_init`` / ``client_step``
+    Per-client state entering a local run (SCAFFOLD's control variate,
+    a submodel mask) and the scan body itself. The engine supplies a
+    ``StepCtx`` (value_and_grad, optimizer, anchor, trainable mask,
+    server context, FedConfig) and threads ``(params, opt_state, state)``
+    through the scan; the algorithm decides what a step does.
+    ``client_finalize`` closes a local run: ``(w_new, new_state, msg)``
+    where ``msg`` is the algorithm's server-bound side channel (SCAFFOLD's
+    variate delta; empty for stateless algorithms).
+
+``server_reduce``
+    Decomposed for the batched engines as ``reduce_prepare`` (a
+    per-client transform over the stacked client axis — FedHM's low-rank
+    reconstruction lives here, so it runs *inside* the round program,
+    under vmap and shard_map alike), the engine's weighted fold, and
+    ``reduce_finish`` (fold the weighted ``msg`` sum into the server
+    context — SCAFFOLD's variate update). The async path uses ``mix``:
+    one staleness-weighted receive, generalizing ``fedasync._mix``.
+
+``encode`` / ``decode``
+    The wire codec, generalizing ``compression.quantize_delta`` to
+    algorithm-shaped payloads: low-rank factors for ``LowRankSubmodel``,
+    quantized variate deltas for ``Scaffold``.
+
+Default ``FedProx()`` is *bit-identical* to the pre-refactor engines —
+its state, context and msg are empty pytrees (zero leaves: the traced
+programs are unchanged) and its hooks are the exact arithmetic the
+engines inlined before. It is pinned as the parity oracle.
+
+Compile-cache discipline: algorithm identity enters the engine memo key
+through ``cache_key()`` (hashable, shared by all instances with the same
+traced behavior), so the padded-scan compile cache stays one entry per
+``(round shape, algorithm)``. Anything *traced* — LowRankSubmodel's
+per-client rank — rides in the client state as a traced value, never in
+the key: a fleet of mixed capacities still compiles ONE round program.
+
+Mutable cross-round persistence (per-client states, the server context)
+lives on the *algorithm instance* the caller owns, host-side, keyed by
+real client ids — engines stay pure and memoizable.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression
+from repro.models import registry
+from repro.optim import (apply_mask, control_variate_grad, proximal_grad,
+                         sgd, trainable_mask)
+from repro.types import FedConfig, ModelConfig
+
+_tree_map = jax.tree_util.tree_map
+
+# 2-D leaves at least this wide on both sides carry low-rank factor
+# payloads; anything smaller (biases, norms, tiny heads) ships dense.
+# Static so every LowRankSubmodel instance traces the same program.
+_MIN_FACTOR_SIDE = 4
+
+
+class StepCtx(NamedTuple):
+    """What the engine hands the algorithm for one local iteration."""
+    value_and_grad: Callable      # (params, batch) -> (loss, grads)
+    opt: Any                      # repro.optim.Optimizer
+    anchor: Any                   # the round's global model w_t
+    mask: Any                     # trainable mask (0/1 pytree)
+    server_ctx: Any               # algorithm's server context (broadcast)
+    fed: FedConfig
+
+
+class WireUpdate(NamedTuple):
+    """One client update as it crosses the wire."""
+    algo: str
+    payload: Any                  # algorithm-shaped pytree(s)
+    meta: Any                     # host-side static metadata (ranks, ...)
+    base_bytes: int               # dense float payload it replaces
+    wire_bytes: int
+
+
+def _f32(x):
+    return x.astype(jnp.float32)
+
+
+def _zeros_f32_like(params):
+    return _tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _tree_bytes(tree) -> int:
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+def weighted_state_sum(trees_stacked, weights):
+    """Σ_c w_c · tree_c over the leading client axis, in f32 (server-state
+    accumulations stay f32; params casting is the engine's job)."""
+    return _tree_map(
+        lambda l: jnp.einsum("c,c...->...", weights, _f32(l)),
+        trees_stacked)
+
+
+class FedAlgorithm:
+    """Base class; also the stateless-algorithm contract.
+
+    ``stateful = False`` means state/ctx/msg are all empty pytrees and the
+    engines keep their legacy entry-point outputs ``(w_new, losses)`` —
+    the compiled programs gain zero leaves and stay bit-identical.
+    """
+
+    name = "base"
+    stateful = False
+    # route every update through encode/decode even without compress_bits
+    # (LowRankSubmodel: projection happens on the wire in the async path)
+    wire_always = False
+
+    def __init__(self):
+        self._states: dict = {}       # client id -> state pytree
+        self._ctx: Any = None         # server context pytree
+        self._fleet = None
+
+    # -- identity ---------------------------------------------------------
+    def cache_key(self):
+        """Hashable identity for engine memoization / compile keying.
+        Equal keys MUST mean equal traced behavior of every hook."""
+        return (type(self).__name__,)
+
+    def __repr__(self):
+        return f"{type(self).__name__}()"
+
+    # -- traced client hooks ---------------------------------------------
+    def server_init(self, params_global):
+        """Server-side algorithm context (broadcast to clients)."""
+        return ()
+
+    def client_init(self, params_global, client_id: int = 0):
+        """Per-client carried state entering a local run."""
+        return ()
+
+    def client_step(self, ctx: StepCtx, carry, batch):
+        """One local iteration — the scan body. Carry is
+        ``(params, opt_state, state)``; returns ``(carry, loss)``."""
+        params, opt_state, state = carry
+        loss, grads = ctx.value_and_grad(params, batch)
+        grads = self.local_grads(grads, params, ctx.anchor, state,
+                                 ctx.server_ctx, ctx.fed)
+        grads = apply_mask(grads, ctx.mask)
+        params, opt_state = ctx.opt.update(grads, opt_state, params)
+        return (params, opt_state, state), loss
+
+    def local_grads(self, grads, params, anchor, state, server_ctx,
+                    fed: FedConfig):
+        """Gradient transform inside ``client_step`` — override this when
+        the step is 'SGD on transformed gradients' (most algorithms)."""
+        return proximal_grad(grads, params, anchor, fed.prox_theta)
+
+    def client_finalize(self, w_new, anchor, state, n_iters, server_ctx,
+                        fed: FedConfig):
+        """Close a local run: ``(w_new, new_state, msg)``. ``n_iters`` is
+        the client's true iteration count (traced in the padded round)."""
+        return w_new, state, ()
+
+    # -- traced server hooks ----------------------------------------------
+    def reduce_prepare(self, w_news, anchor, states, server_ctx):
+        """Per-client transform over the stacked client axis, applied
+        before the weighted fold (runs inside the round program)."""
+        return w_news
+
+    def reduce_finish(self, avg_params, msg_sum, server_ctx, params_global):
+        """Fold the weighted average + weighted msg sum into
+        ``(new_global, new_server_ctx)``."""
+        return avg_params, server_ctx
+
+    def mix(self, params, server_ctx, w_new, msg, beta_t):
+        """One async receive: Algorithm 1's staleness-weighted mix,
+        ``(new_params, new_server_ctx)``. Default matches
+        ``fedasync._mix`` exactly (f32 accumulate, cast back)."""
+        new = _tree_map(
+            lambda a, b: ((1.0 - beta_t) * _f32(a)
+                          + beta_t * _f32(b)).astype(a.dtype),
+            params, w_new)
+        return new, server_ctx
+
+    # -- wire codec (host-side) -------------------------------------------
+    def encode(self, w_new, msg, anchor, fed: FedConfig) -> WireUpdate:
+        """Client -> server payload. Default: the int8/int4 delta codec
+        when ``fed.compress_bits`` is set, dense floats otherwise."""
+        base = _tree_bytes(w_new)
+        if fed.compress_bits:
+            upd = compression.quantize_delta(w_new, anchor,
+                                             fed.compress_bits)
+            return WireUpdate(self.name, upd, None, base, upd.wire_bytes)
+        return WireUpdate(self.name, w_new, None, base, base)
+
+    def decode(self, wire: WireUpdate, anchor, fed: FedConfig):
+        """Server-side reconstruction: ``(w_new, msg)``."""
+        if isinstance(wire.payload, compression.QuantizedUpdate):
+            return compression.dequantize_delta(wire.payload, anchor), ()
+        return wire.payload, ()
+
+    # -- host-side persistence (the caller's instance owns this) ----------
+    def bind_fleet(self, fleet):
+        """Observe the fleet driving this run (LowRankSubmodel derives
+        per-client capacity from profile speed rank). No-op by default."""
+        self._fleet = fleet
+
+    def state_for(self, k: int, params):
+        if not self.stateful:
+            return ()
+        k = int(k)
+        if k not in self._states:
+            self._states[k] = self.client_init(params, k)
+        return self._states[k]
+
+    def stacked_states(self, params, ids):
+        """Per-client states stacked to a leading client axis for the
+        batched engines (init-on-miss, keyed by real client id)."""
+        if not self.stateful:
+            return ()
+        sts = [self.state_for(k, params) for k in ids]
+        return _tree_map(lambda *ls: jnp.stack(ls), *sts)
+
+    def store_state(self, k: int, state):
+        if self.stateful:
+            self._states[int(k)] = state
+
+    def store_states(self, ids, stacked_states):
+        """Commit a round's stacked new states back per client id."""
+        if not self.stateful:
+            return
+        for j, k in enumerate(ids):
+            self._states[int(k)] = _tree_map(lambda a: a[j], stacked_states)
+
+    def ctx_for(self, params):
+        if not self.stateful:
+            return ()
+        if self._ctx is None:
+            self._ctx = self.server_init(params)
+        return self._ctx
+
+    def set_ctx(self, ctx):
+        if self.stateful:
+            self._ctx = ctx
+
+    def reset(self):
+        """Drop all persisted client/server algorithm state."""
+        self._states.clear()
+        self._ctx = None
+
+
+class FedProx(FedAlgorithm):
+    """The paper's proximal local SGD (§III-D) — the existing behavior,
+    now as the default plug-in and the refactor's parity oracle. Stateless:
+    every hook is the exact arithmetic the engines inlined before."""
+
+    name = "fedprox"
+
+
+class Scaffold(FedAlgorithm):
+    """SCAFFOLD (Karimireddy et al. 2020), Option II variate update.
+
+    Client k carries a control variate c_k (f32, shaped like params); the
+    server carries c. Each local step corrects the proximal gradient by
+    ``+ c - c_k`` (``optim.control_variate_grad``); after H^k steps
+
+        c_k⁺ = c_k − c + (w_t − w_new) / (H^k · lr)
+        msg  = Δc = c_k⁺ − c_k
+
+    Sync server: c += Σ_k weight_k · Δc_k (the round's weighted fold —
+    full-participation SCAFFOLD; under client sampling this applies the
+    sampled estimate undamped). Async server: c += β_t · Δc — the same
+    staleness damping Algorithm 1 applies to the params, so a stale
+    variate cannot yank c harder than its model update yanks w.
+
+    Clients that ran zero iterations keep their variate unchanged.
+    Requires a float ``fed.lr`` (no schedules: the variate update needs
+    the step size in closed form).
+    """
+
+    name = "scaffold"
+    stateful = True
+
+    def server_init(self, params_global):
+        return _zeros_f32_like(params_global)
+
+    def client_init(self, params_global, client_id: int = 0):
+        return _zeros_f32_like(params_global)
+
+    def local_grads(self, grads, params, anchor, state, server_ctx,
+                    fed: FedConfig):
+        grads = proximal_grad(grads, params, anchor, fed.prox_theta)
+        return control_variate_grad(grads, server_ctx, state)
+
+    def client_finalize(self, w_new, anchor, state, n_iters, server_ctx,
+                        fed: FedConfig):
+        lr = float(fed.lr)        # raises for schedule callables, by design
+        n = jnp.maximum(jnp.asarray(n_iters, jnp.float32), 1.0)
+        active = jnp.asarray(n_iters, jnp.int32) > 0
+        c_new = _tree_map(
+            lambda ck, c, a, w: jnp.where(
+                active, ck - c + (_f32(a) - _f32(w)) / (n * lr), ck),
+            state, server_ctx, anchor, w_new)
+        delta_c = _tree_map(lambda cn, ck: cn - ck, c_new, state)
+        return w_new, c_new, delta_c
+
+    def reduce_finish(self, avg_params, msg_sum, server_ctx, params_global):
+        new_ctx = _tree_map(lambda c, d: c + d, server_ctx, msg_sum)
+        return avg_params, new_ctx
+
+    def mix(self, params, server_ctx, w_new, msg, beta_t):
+        new = _tree_map(
+            lambda a, b: ((1.0 - beta_t) * _f32(a)
+                          + beta_t * _f32(b)).astype(a.dtype),
+            params, w_new)
+        new_ctx = _tree_map(lambda c, d: c + beta_t * d, server_ctx, msg)
+        return new, new_ctx
+
+    def encode(self, w_new, msg, anchor, fed: FedConfig) -> WireUpdate:
+        base = _tree_bytes(w_new) + _tree_bytes(msg)
+        if not fed.compress_bits:
+            return WireUpdate(self.name, (w_new, msg), None, base, base)
+        upd = compression.quantize_delta(w_new, anchor, fed.compress_bits)
+        zero = _zeros_f32_like(msg)
+        mupd = compression.quantize_delta(msg, zero, fed.compress_bits)
+        return WireUpdate(self.name, (upd, mupd), None, base,
+                          upd.wire_bytes + mupd.wire_bytes)
+
+    def decode(self, wire: WireUpdate, anchor, fed: FedConfig):
+        w, m = wire.payload
+        if isinstance(w, compression.QuantizedUpdate):
+            msg = compression.dequantize_delta(
+                m, _tree_map(lambda s: jnp.zeros_like(s, jnp.float32),
+                             m.q))
+            return compression.dequantize_delta(w, anchor), msg
+        return w, m
+
+
+def _is_factor_leaf(a) -> bool:
+    shape = np.shape(a)
+    return len(shape) == 2 and min(shape) >= _MIN_FACTOR_SIDE
+
+
+def _static_rank(cap: float, r_full: int) -> int:
+    # f32 on purpose: must agree with the traced jnp.ceil in
+    # reduce_prepare for any capacity a client state can carry
+    return int(max(1, min(r_full,
+                          math.ceil(float(np.float32(cap)) * r_full))))
+
+
+class LowRankSubmodel(FedAlgorithm):
+    """Capacity-heterogeneous clients: FedHM-style low-rank updates for
+    matrix leaves + subMFL-style seeded masks for the rest.
+
+    Client k gets a capacity fraction cap_k ∈ (0, 1] — ``capacity`` scaled
+    by the fleet profile's relative speed (``Fleet.capacity``: fastest
+    device 1.0, slowest 0.5) once ``bind_fleet`` has run. Its state is
+
+        {"cap": f32 scalar (traced!), "mask": 0/1 pytree}
+
+    Training: non-factor leaves' gradients multiply a seeded 0/1 mask
+    with keep-probability cap_k (the dropout-derived submodel); factor
+    leaves train dense but their *delta* is rank-truncated at the server.
+
+    Server reduce (``reduce_prepare``, inside the round program): each
+    factor leaf's delta SVDs at full rank and a traced mask
+    ``arange(r) < ceil(cap_k · r)`` zeroes the trailing singular values —
+    per-client ranks are DATA, not shapes, so a fleet of mixed capacities
+    still compiles one round program (the compile-cache invariant the
+    guard-rail tests pin).
+
+    Wire: factor leaves ship the truncated SVD factors (U_r, s_r, V_r^T)
+    — quantized through the int8/int4 codec when ``fed.compress_bits`` is
+    set — and everything else ships dense; ``(m+n+1)·r_k`` values per
+    matrix instead of ``m·n``. The async path always routes through the
+    codec (``wire_always``) so loop and scan engines see identical
+    projected updates.
+    """
+
+    name = "lowrank"
+    stateful = True
+    wire_always = True
+
+    def __init__(self, capacity: float = 0.25, min_capacity: float = 0.05,
+                 seed: int = 0):
+        super().__init__()
+        if not 0.0 < capacity <= 1.0:
+            raise ValueError(f"capacity must be in (0, 1], got {capacity}")
+        self.capacity = float(capacity)
+        self.min_capacity = float(min_capacity)
+        self.seed = int(seed)
+        self._caps: dict = {}
+
+    def cache_key(self):
+        # capacity/seed ride in the (traced) client state, never the key:
+        # every instance shares one compiled round program per shape
+        return (type(self).__name__,)
+
+    def __repr__(self):
+        return (f"LowRankSubmodel(capacity={self.capacity}, "
+                f"seed={self.seed})")
+
+    # -- per-client capacity ----------------------------------------------
+    def capacity_for(self, k: int) -> float:
+        k = int(k)
+        if k not in self._caps:
+            rel = 1.0
+            if self._fleet is not None:
+                rel = float(self._fleet.capacity(k))
+            self._caps[k] = max(self.min_capacity,
+                                min(1.0, self.capacity * rel))
+        return self._caps[k]
+
+    def set_capacity(self, k: int, cap: float):
+        self._caps[int(k)] = max(self.min_capacity, min(1.0, float(cap)))
+
+    def client_init(self, params_global, client_id: int = 0):
+        cap = self.capacity_for(client_id)
+        rng = np.random.default_rng((self.seed, 0x5EED, int(client_id)))
+
+        def mask_leaf(p):
+            if _is_factor_leaf(p):
+                return jnp.float32(1.0)      # rank-truncated, not masked
+            keep = (rng.random(np.shape(p)) < cap) | (np.size(p) <= 1)
+            return jnp.asarray(keep, jnp.float32)
+
+        return {"cap": jnp.float32(cap),
+                "mask": _tree_map(mask_leaf, params_global)}
+
+    def local_grads(self, grads, params, anchor, state, server_ctx,
+                    fed: FedConfig):
+        grads = proximal_grad(grads, params, anchor, fed.prox_theta)
+        return _tree_map(lambda g, m: (g * m).astype(g.dtype),
+                         grads, state["mask"])
+
+    def client_finalize(self, w_new, anchor, state, n_iters, server_ctx,
+                        fed: FedConfig):
+        # the capacity IS the server-bound message: the wire codec and the
+        # server reconstruction both need cap_k to agree on ranks
+        return w_new, state, state["cap"]
+
+    # -- server reduce ----------------------------------------------------
+    def reduce_prepare(self, w_news, anchor, states, server_ctx):
+        caps = states["cap"]                 # (n_clients,) traced
+
+        def one_client(w, cap):
+            def leaf(wl, al):
+                if not _is_factor_leaf(al):
+                    return wl
+                d = _f32(wl) - _f32(al)
+                u, s, vt = jnp.linalg.svd(d, full_matrices=False)
+                r_full = s.shape[0]
+                r_k = jnp.clip(jnp.ceil(cap * r_full), 1, r_full)
+                keep = (jnp.arange(r_full) < r_k).astype(jnp.float32)
+                rec = (u * (s * keep)) @ vt
+                return (_f32(al) + rec).astype(wl.dtype)
+            return _tree_map(leaf, w, anchor)
+
+        return jax.vmap(one_client, in_axes=(0, 0))(w_news, caps)
+
+    # -- wire codec -------------------------------------------------------
+    def encode(self, w_new, msg, anchor, fed: FedConfig) -> WireUpdate:
+        """Factor leaves ship truncated SVD factors at the client's rank
+        (cap_k from ``msg``, the finalize side channel); everything else
+        ships dense — both through the int8/int4 codec when
+        ``fed.compress_bits`` is set."""
+        cap_leaves = jax.tree_util.tree_leaves(msg)
+        cap = (float(np.asarray(cap_leaves[0])) if cap_leaves
+               else self.capacity)
+        base = _tree_bytes(w_new)
+        w_flat = jax.tree_util.tree_leaves(w_new)
+        a_flat = jax.tree_util.tree_leaves(anchor)
+        payload, ranks = [], []
+        wire = 0
+        bits = fed.compress_bits
+        for wl, al in zip(w_flat, a_flat):
+            if _is_factor_leaf(al):
+                d = np.asarray(_f32(wl) - _f32(al))
+                r = _static_rank(cap, min(d.shape))
+                u, s, vt = np.linalg.svd(d, full_matrices=False)
+                fac = (jnp.asarray(u[:, :r]), jnp.asarray(s[:r]),
+                       jnp.asarray(vt[:r, :]))
+                if bits:
+                    zeros = _tree_map(jnp.zeros_like, fac)
+                    qf = compression.quantize_delta(fac, zeros, bits)
+                    payload.append(qf)
+                    wire += qf.wire_bytes
+                else:
+                    payload.append(fac)
+                    wire += _tree_bytes(fac)
+                ranks.append(r)
+            else:
+                if bits:
+                    q = compression.quantize_delta(wl, al, bits)
+                    payload.append(q)
+                    wire += q.wire_bytes
+                else:
+                    payload.append(wl)
+                    wire += wl.size * wl.dtype.itemsize
+                ranks.append(0)
+        return WireUpdate(self.name, payload,
+                          {"ranks": tuple(ranks), "cap": cap}, base, wire)
+
+    def decode(self, wire: WireUpdate, anchor, fed: FedConfig):
+        a_flat, treedef = jax.tree_util.tree_flatten(anchor)
+        out = []
+        for pl, al, r in zip(wire.payload, a_flat, wire.meta["ranks"]):
+            if r:
+                if isinstance(pl, compression.QuantizedUpdate):
+                    zeros = _tree_map(
+                        lambda q: jnp.zeros(q.shape, jnp.float32), pl.q)
+                    u, s, vt = compression.dequantize_delta(pl, zeros)
+                else:
+                    u, s, vt = pl
+                rec = (_f32(u) * _f32(s)) @ _f32(vt)
+                out.append((_f32(al) + rec).astype(al.dtype))
+            elif isinstance(pl, compression.QuantizedUpdate):
+                out.append(compression.dequantize_delta(pl, al))
+            else:
+                out.append(pl)
+        return (jax.tree_util.tree_unflatten(treedef, out),
+                jnp.float32(wire.meta["cap"]))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ALGORITHMS = {
+    "fedprox": FedProx,
+    "scaffold": Scaffold,
+    "lowrank": LowRankSubmodel,
+}
+
+
+def make_algorithm(name, **kwargs) -> FedAlgorithm:
+    """Validated algorithm constructor (the ``EngineSpec.from_str`` of the
+    algorithm knob). Accepts an instance (passed through), or a name from
+    ``ALGORITHMS``; unknown names raise naming the valid options."""
+    if isinstance(name, FedAlgorithm):
+        return name
+    try:
+        cls = ALGORITHMS[str(name).lower()]
+    except KeyError:
+        raise ValueError(
+            f"algorithm must be one of {sorted(ALGORITHMS)}, "
+            f"got {name!r}") from None
+    return cls(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Loop oracles: per-iteration dispatch, algorithm-aware
+# ---------------------------------------------------------------------------
+
+# jitted per-iteration steps memoized per (cfg, fed, algorithm identity) —
+# the algorithm hooks are pure per cache_key, so any instance with the
+# same key reuses the compiled step
+_STEP_CACHE: dict = {}
+_STEP_CACHE_MAX = 16
+
+
+def make_alg_step(cfg: ModelConfig, fed: FedConfig,
+                  algorithm: FedAlgorithm):
+    """One algorithm-aware local iteration, jitted — the per-iteration
+    oracle generalizing ``fedasync.make_client_step``.
+
+    (params, opt_state, state, anchor, batch, mask, server_ctx)
+        -> (params, opt_state, state, loss)
+    """
+    key = (cfg, fed, algorithm.cache_key())
+    if key in _STEP_CACHE:
+        return _STEP_CACHE[key]
+    opt = sgd(fed.lr, fed.momentum, fed.weight_decay)
+
+    def task_loss(params, batch):
+        return registry.loss_fn(params, cfg, batch)[0]
+
+    # Oracle step, memoized here (bounded) rather than via JitCache: its
+    # identity is part of the loop-vs-engine parity contract.
+    # repro-lint: disable=R1
+    @jax.jit
+    def step(params, opt_state, state, anchor, batch, mask, server_ctx):
+        ctx = StepCtx(jax.value_and_grad(task_loss), opt, anchor, mask,
+                      server_ctx, fed)
+        (params, opt_state, state), loss = algorithm.client_step(
+            ctx, (params, opt_state, state), batch)
+        return params, opt_state, state, loss
+
+    while len(_STEP_CACHE) >= _STEP_CACHE_MAX:
+        _STEP_CACHE.pop(next(iter(_STEP_CACHE)))
+    _STEP_CACHE[key] = (step, opt)
+    return step, opt
+
+
+def client_update_loop(params_global, batches, cfg: ModelConfig,
+                       fed: FedConfig, algorithm: FedAlgorithm,
+                       client_id: int = 0, num_iters=None, mask=None,
+                       server_ctx=None, state=None):
+    """Algorithm-aware legacy loop: one jitted step + one host sync per
+    iteration — the parity oracle for the scan/padded engines.
+
+    Returns ``(w_new, new_state, msg, losses)`` (losses as floats).
+    Persists the client's new state on ``algorithm``.
+    """
+    step, opt = make_alg_step(cfg, fed, algorithm)
+    if mask is None:
+        mask = trainable_mask(params_global, fed.trainable)
+    if server_ctx is None:
+        server_ctx = algorithm.ctx_for(params_global)
+    if state is None:
+        state = algorithm.state_for(client_id, params_global)
+    params, anchor = params_global, params_global
+    opt_state = opt.init(params)
+    H = num_iters if num_iters is not None else fed.local_iters_max
+    losses = []
+    for _, batch in zip(range(H), batches):
+        params, opt_state, state, loss = step(
+            params, opt_state, state, anchor, batch, mask, server_ctx)
+        losses.append(float(loss))
+    w_new, new_state, msg = algorithm.client_finalize(
+        params, anchor, state, jnp.int32(len(losses)), server_ctx, fed)
+    algorithm.store_state(client_id, new_state)
+    return w_new, new_state, msg, losses
+
+
+def server_reduce(algorithm: FedAlgorithm, params_global, w_news, states,
+                  msgs, weights, server_ctx=None, commit: bool = True):
+    """Eager algorithm-aware round fold — the loop oracle's server half
+    (the engines run the same prepare/fold/finish inside their programs).
+
+    ``w_news``/``states``/``msgs`` are per-client lists; returns the new
+    global params and (with ``commit``) persists the new server context.
+    """
+    weights = jnp.asarray(weights, jnp.float32)
+    if server_ctx is None:
+        server_ctx = algorithm.ctx_for(params_global)
+    w_stack = _tree_map(lambda *ls: jnp.stack(ls), *w_news)
+    if algorithm.stateful:
+        st_stack = _tree_map(lambda *ls: jnp.stack(ls), *states)
+        w_stack = algorithm.reduce_prepare(w_stack, params_global,
+                                           st_stack, server_ctx)
+    avg = _tree_map(
+        lambda l, p: jnp.einsum("c,c...->...", weights,
+                                _f32(l)).astype(p.dtype),
+        w_stack, params_global)
+    msg_sum = ()
+    if msgs and jax.tree_util.tree_leaves(msgs[0]):
+        m_stack = _tree_map(lambda *ls: jnp.stack(ls), *msgs)
+        msg_sum = weighted_state_sum(m_stack, weights)
+    new_global, new_ctx = algorithm.reduce_finish(avg, msg_sum, server_ctx,
+                                                  params_global)
+    if commit:
+        algorithm.set_ctx(new_ctx)
+    return new_global, new_ctx

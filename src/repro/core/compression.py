@@ -1,11 +1,18 @@
 """Communication-efficient client updates (paper §II cites [44-46]:
 FedPAQ-style quantized periodic averaging).
 
-Clients send *delta* updates Δ = w_new − w_t quantized to int8 with a
-per-leaf symmetric scale; the server reconstructs w_new ≈ w_t + deq(Δ).
-On the paper's testbed the model upload rides constrained links (Table II's
-sync barrier is partly upload contention) — 4× smaller updates shrink
-exactly the term the async design hides.
+Clients send *delta* updates Δ = w_new − w_t quantized to int8 (or packed
+int4) with a per-leaf symmetric scale; the server reconstructs
+w_new ≈ w_t + deq(Δ).  On the paper's testbed the model upload rides
+constrained links (Table II's sync barrier is partly upload contention) —
+4×/8× smaller updates shrink exactly the term the async design hides.
+
+int4 packs two signed values per byte (``pack_int4``/``unpack_int4``);
+values quantize to [-7, 7] so the nibble 0x8 (-8) is never produced and
+the symmetric error bound |Δ - deq(q)| ≤ scale/2 holds for both widths.
+Masked-submodel and low-rank factor payloads (``core/algorithms.py``)
+ride the same per-leaf codec — that is the wire-size knob the ROADMAP
+calls out for embedded-device fleets.
 """
 from __future__ import annotations
 
@@ -16,23 +23,61 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+# per-width quantization range: symmetric, excludes int4's -8 so the
+# codec never emits a value whose negation is unrepresentable
+_QMAX = {8: 127, 4: 7}
+
 
 class QuantizedUpdate(NamedTuple):
-    q: Any        # int8 pytree
+    q: Any        # int8 pytree (int4 payloads kept unpacked for compute)
     scale: Any    # f32 scalar per leaf
     base_bytes: int
     wire_bytes: int
+    bits: int = 8
+
+
+def packed_nbytes(size: int, bits: int) -> int:
+    """Payload bytes for ``size`` quantized values at the given width."""
+    if bits == 8:
+        return size
+    return (size + 1) // 2
+
+
+def pack_int4(q):
+    """Pack an int8 array of values in [-7, 7] into a uint8 array, two
+    nibbles per byte (low nibble first; odd tails pad with 0)."""
+    flat = np.asarray(q, dtype=np.int8).reshape(-1)
+    if flat.size % 2:
+        flat = np.concatenate([flat, np.zeros(1, np.int8)])
+    u = (flat.astype(np.int16) & 0xF).astype(np.uint8)
+    return (u[0::2] | (u[1::2] << 4)).astype(np.uint8)
+
+
+def unpack_int4(packed, size: int):
+    """Inverse of ``pack_int4``: uint8 nibbles back to int8, trimmed to
+    ``size`` values (sign-extended from 4 bits)."""
+    p = np.asarray(packed, dtype=np.uint8)
+    lo = (p & 0xF).astype(np.int8)
+    hi = (p >> 4).astype(np.int8)
+    vals = np.empty(p.size * 2, np.int8)
+    vals[0::2] = lo
+    vals[1::2] = hi
+    vals = np.where(vals >= 8, vals - 16, vals).astype(np.int8)
+    return vals[:size]
 
 
 def quantize_delta(w_new, anchor, bits: int = 8) -> QuantizedUpdate:
     """Symmetric per-leaf quantization of (w_new - anchor)."""
-    if bits != 8:
-        raise ValueError(f"int8 wire format only (bits={bits})")
+    if bits not in _QMAX:
+        raise ValueError(
+            f"unsupported wire width bits={bits!r}; valid: "
+            f"{sorted(_QMAX)} (int8, packed int4)")
+    qmax = _QMAX[bits]
 
     def q_leaf(a, b):
         d = (a.astype(jnp.float32) - b.astype(jnp.float32))
-        scale = jnp.maximum(jnp.max(jnp.abs(d)), 1e-12) / 127.0
-        q = jnp.clip(jnp.round(d / scale), -127, 127).astype(jnp.int8)
+        scale = jnp.maximum(jnp.max(jnp.abs(d)), 1e-12) / qmax
+        q = jnp.clip(jnp.round(d / scale), -qmax, qmax).astype(jnp.int8)
         return q, scale
 
     flat, treedef = jax.tree_util.tree_flatten(w_new)
@@ -44,10 +89,10 @@ def quantize_delta(w_new, anchor, bits: int = 8) -> QuantizedUpdate:
         qs.append(q)
         scales.append(s)
         base += a.size * a.dtype.itemsize
-        wire += q.size * 1 + 4
+        wire += packed_nbytes(a.size, bits) + 4
     return QuantizedUpdate(jax.tree_util.tree_unflatten(treedef, qs),
                            jax.tree_util.tree_unflatten(treedef, scales),
-                           base, wire)
+                           base, wire, bits)
 
 
 def dequantize_delta(upd: QuantizedUpdate, anchor):

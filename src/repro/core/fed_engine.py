@@ -37,6 +37,21 @@ serving stack: serving's bucketed prefill keys into the same
 static-shape cache machinery this engine keys ``(H, trainable)`` round
 shapes into. See core/compile_cache.py.
 
+The *algorithm* inside the programs — the per-iteration update rule, the
+client-carried state, the server fold, the wire format — is pluggable:
+every engine takes ``algorithm=`` (a ``core.algorithms.FedAlgorithm``,
+default ``FedProx()``, bit-identical to the pre-refactor behavior). A
+stateless algorithm keeps the legacy entry-point outputs
+``(w_new, losses)``; a stateful one (SCAFFOLD variates, low-rank
+capacities) threads ``(server_ctx, states)`` through the same programs —
+appended at the END of every jitted argument tuple so the donation
+argnums (params, batch stacks) stay put — and returns
+``(w_new, new_state, msg, losses)`` per client / ``(new_global, new_ctx,
+new_states, losses)`` per round. Algorithm identity folds into the
+engine memo key via ``cache_key()``; traced per-client quantities (H^k,
+low-rank capacity) stay out of it, keeping ONE compiled program per
+``(round shape, algorithm)``.
+
 The legacy loop remains in place as a parity oracle
 (tests/test_fed_engine.py checks float32 agreement).
 """
@@ -49,9 +64,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import algorithms
 from repro.core.compile_cache import JitCache as _JitCache
 from repro.models import registry
-from repro.optim import apply_mask, proximal_grad, sgd, trainable_mask
+from repro.optim import sgd, trainable_mask
 from repro.types import FedConfig, ModelConfig
 
 
@@ -174,10 +190,13 @@ class ClientRun:
     windowed run is compile-free after its first pass over the sizes.
     """
 
-    def __init__(self, cfg: ModelConfig, fed: FedConfig, loss_kwargs=None):
+    def __init__(self, cfg: ModelConfig, fed: FedConfig, loss_kwargs=None,
+                 algorithm=None):
         self.cfg = cfg
         self.fed = fed
         self.loss_kwargs = dict(loss_kwargs or {})
+        self.algorithm = (algorithm if algorithm is not None
+                          else algorithms.FedProx())
         self.opt = sgd(fed.lr, fed.momentum, fed.weight_decay)
         self._jits = _JitCache()
 
@@ -186,51 +205,78 @@ class ClientRun:
         return registry.loss_fn(params, self.cfg, batch,
                                 **self.loss_kwargs)[0]
 
-    def _run(self, params_global, stacked, mask):
-        anchor = params_global
+    def _ctx(self, anchor, mask, server_ctx):
+        return algorithms.StepCtx(jax.value_and_grad(self._task_loss),
+                                  self.opt, anchor, mask, server_ctx,
+                                  self.fed)
+
+    def _run(self, params_global, stacked, mask, server_ctx=(), state=()):
+        alg = self.algorithm
+        ctx = self._ctx(params_global, mask, server_ctx)
 
         def body(carry, batch):
-            params, opt_state = carry
-            loss, grads = jax.value_and_grad(self._task_loss)(params, batch)
-            grads = proximal_grad(grads, params, anchor, self.fed.prox_theta)
-            grads = apply_mask(grads, mask)
-            params, opt_state = self.opt.update(grads, opt_state, params)
-            return (params, opt_state), loss
+            return alg.client_step(ctx, carry, batch)
 
-        init = (params_global, self.opt.init(params_global))
-        (w_new, _), losses = jax.lax.scan(body, init, stacked)
-        return w_new, losses
+        init = (params_global, self.opt.init(params_global), state)
+        (w_new, _, state_f), losses = jax.lax.scan(body, init, stacked)
+        if not alg.stateful:
+            return w_new, losses
+        w_new, new_state, msg = alg.client_finalize(
+            w_new, params_global, state_f, jnp.int32(_batch_len(stacked)),
+            server_ctx, self.fed)
+        return w_new, new_state, msg, losses
 
-    def _run_padded(self, params_global, stacked, n_iters, mask):
+    def _run_padded(self, params_global, stacked, n_iters, mask,
+                    server_ctx=(), state=()):
         """Masked scan over an H_max-padded stack: steps with index >=
         ``n_iters`` (a traced int32 scalar) are identity on the carry and
         emit NaN. H^k therefore never enters the compile key — one program
         covers every iteration budget at this pad length."""
-        anchor = params_global
+        alg = self.algorithm
+        ctx = self._ctx(params_global, mask, server_ctx)
 
         def body(carry, xs):
             i, batch = xs
-            params, opt_state = carry
-            loss, grads = jax.value_and_grad(self._task_loss)(params, batch)
-            grads = proximal_grad(grads, params, anchor, self.fed.prox_theta)
-            grads = apply_mask(grads, mask)
-            new_params, new_opt = self.opt.update(grads, opt_state, params)
+            new_carry, loss = alg.client_step(ctx, carry, batch)
             active = i < n_iters
-            params, opt_state = jax.tree_util.tree_map(
+            carry = jax.tree_util.tree_map(
                 lambda new, old: jnp.where(active, new, old),
-                (new_params, new_opt), (params, opt_state))
-            return (params, opt_state), jnp.where(active, loss, jnp.nan)
+                new_carry, carry)
+            return carry, jnp.where(active, loss, jnp.nan)
 
         H = _batch_len(stacked)
-        init = (params_global, self.opt.init(params_global))
-        (w_new, _), losses = jax.lax.scan(
+        init = (params_global, self.opt.init(params_global), state)
+        (w_new, _, state_f), losses = jax.lax.scan(
             body, init, (jnp.arange(H, dtype=jnp.int32), stacked))
-        return w_new, losses
+        if not alg.stateful:
+            return w_new, losses
+        w_new, new_state, msg = alg.client_finalize(
+            w_new, params_global, state_f, n_iters, server_ctx, self.fed)
+        return w_new, new_state, msg, losses
 
-    def _run_padded_batch(self, params_global, stacked_clients, iters, mask):
+    def _run_padded_batch(self, params_global, stacked_clients, iters, mask,
+                          server_ctx=(), states=()):
         return jax.vmap(
-            lambda s, n: self._run_padded(params_global, s, n, mask)
-        )(stacked_clients, iters)
+            lambda s, n, st: self._run_padded(params_global, s, n, mask,
+                                              server_ctx, st)
+        )(stacked_clients, iters, states)
+
+    def _alg_inputs(self, params_global, server_ctx, state_or_states,
+                    ids=None):
+        """Resolve the (server_ctx, state) pair for a call: empty pytrees
+        for stateless algorithms (zero traced leaves — the legacy
+        programs), the bound instance's persisted state otherwise."""
+        alg = self.algorithm
+        if not alg.stateful:
+            return (), ()
+        if server_ctx is None:
+            server_ctx = alg.ctx_for(params_global)
+        if state_or_states is None:
+            if ids is None:
+                state_or_states = alg.state_for(0, params_global)
+            else:
+                state_or_states = alg.stacked_states(params_global, ids)
+        return server_ctx, state_or_states
 
     @property
     def num_compiled(self) -> int:
@@ -241,16 +287,25 @@ class ClientRun:
         regardless of the H vector."""
         return self._jits.num_compiled
 
-    def __call__(self, params_global, stacked, mask=None, donate=False):
+    def __call__(self, params_global, stacked, mask=None, donate=False,
+                 server_ctx=None, state=None):
         """``donate=True`` hands ``stacked``'s buffers to XLA — only safe
-        when the caller will not touch them again (fresh stack per call)."""
+        when the caller will not touch them again (fresh stack per call).
+
+        Stateful algorithms return ``(w_new, new_state, msg, losses)``
+        instead of ``(w_new, losses)``; ``server_ctx``/``state`` default
+        to the bound algorithm instance's persisted values (client 0)."""
         if mask is None:
             mask = trainable_mask(params_global, self.fed.trainable)
+        server_ctx, state = self._alg_inputs(params_global, server_ctx,
+                                             state)
         return self._jits.call("run", self._run, (1,) if donate else (),
-                               (params_global, stacked, mask))
+                               (params_global, stacked, mask, server_ctx,
+                                state))
 
     def run_batch(self, params_global, client_stacks, iters=None, mask=None,
-                  donate=None):
+                  donate=None, server_ctx=None, states=None,
+                  client_ids=None):
         """Batched padded execution of many clients with per-client H^k.
 
         ``client_stacks``: a sequence of per-client stacked batch pytrees
@@ -258,7 +313,10 @@ class ClientRun:
         owned, so it is donated) or an already client-stacked pytree with
         (n_clients, H_max, ...) leaves plus an explicit ``iters``. Returns
         ``(w_news, losses)`` with leading client axes; ``losses`` rows are
-        NaN beyond each client's H^k.
+        NaN beyond each client's H^k. Stateful algorithms additionally
+        take per-client ``states`` stacked on the client axis (default:
+        the bound instance's states for ``client_ids``, default
+        ``range(n)``) and return ``(w_news, new_states, msgs, losses)``.
         """
         if isinstance(client_stacks, (list, tuple)):
             client_stacks, lens = pad_client_batches(
@@ -271,10 +329,14 @@ class ClientRun:
             iters = _full_iters(client_stacks)
         if mask is None:
             mask = trainable_mask(params_global, self.fed.trainable)
+        server_ctx, states = self._alg_inputs(
+            params_global, server_ctx, states,
+            ids=(client_ids if client_ids is not None
+                 else range(_batch_len(client_stacks))))
         return self._jits.call(
             "batch", self._run_padded_batch, (1,) if donate else (),
             (params_global, client_stacks, jnp.asarray(iters, jnp.int32),
-             mask))
+             mask, server_ctx, states))
 
     def unstack(self, stacked, n: int):
         """Split a client-stacked pytree (leaves (n, ...)) into n
@@ -299,16 +361,23 @@ _ENGINE_CACHE: dict = {}
 _ENGINE_CACHE_MAX = 32      # FIFO-bounded: engines hold compiled executables
 
 
-def _engine_key(kind, cfg: ModelConfig, fed: FedConfig, loss_kwargs):
+def _engine_key(kind, cfg: ModelConfig, fed: FedConfig, loss_kwargs,
+                algorithm=None):
     """Cache key over the fields that affect the compiled client program.
 
     Server-side knobs (mixing_beta, staleness_a, ...) don't — two sweeps
     differing only in staleness must share compiled engines. ``kind`` may
-    carry extra identity (e.g. the sharded round's Mesh).
+    carry extra identity (e.g. the sharded round's Mesh). The algorithm
+    enters through ``cache_key()`` — equal keys promise equal traced
+    hooks, so all default/FedProx callers share one engine, and all
+    Scaffold instances share another (their mutable per-client state
+    lives on the caller's instance and flows through arguments).
     """
     lk = tuple(sorted((loss_kwargs or {}).items()))
+    ak = (algorithm.cache_key() if algorithm is not None
+          else algorithms.FedProx().cache_key())
     key = (kind, cfg, fed.lr, fed.momentum, fed.weight_decay,
-           fed.prox_theta, fed.trainable, lk)
+           fed.prox_theta, fed.trainable, lk, ak)
     try:
         hash(key)
     except TypeError:
@@ -339,19 +408,25 @@ def cached_engine(key, build):
     return _ENGINE_CACHE[key]
 
 
-def _cached_engine(kind, cfg, fed, loss_kwargs, build):
-    return cached_engine(_engine_key(kind, cfg, fed, loss_kwargs), build)
+def _cached_engine(kind, cfg, fed, loss_kwargs, build, algorithm=None):
+    return cached_engine(
+        _engine_key(kind, cfg, fed, loss_kwargs, algorithm), build)
 
 
 def make_client_run(cfg: ModelConfig, fed: FedConfig,
-                    loss_kwargs=None) -> ClientRun:
+                    loss_kwargs=None, algorithm=None) -> ClientRun:
     """The scan engine replacing per-iteration ``step(...)`` dispatch.
 
-    Memoized on the client-relevant config fields so repeated simulator
-    runs (hyperparameter sweeps, benchmarks) reuse compiled programs.
+    Memoized on the client-relevant config fields (+ the algorithm's
+    ``cache_key``) so repeated simulator runs (hyperparameter sweeps,
+    benchmarks) reuse compiled programs. Stateful callers should pass
+    ``server_ctx``/``states`` explicitly — the memoized engine may be
+    bound to a different (behaviorally identical) algorithm instance.
     """
-    return _cached_engine("client", cfg, fed, loss_kwargs,
-                          lambda: ClientRun(cfg, fed, loss_kwargs))
+    return _cached_engine(
+        "client", cfg, fed, loss_kwargs,
+        lambda: ClientRun(cfg, fed, loss_kwargs, algorithm=algorithm),
+        algorithm=algorithm)
 
 
 def _weighted_params(w_news, weights, params_global):
@@ -379,25 +454,48 @@ class SyncRound:
     by callers that will never touch the passed-in params again.
     """
 
-    def __init__(self, cfg: ModelConfig, fed: FedConfig, loss_kwargs=None):
+    def __init__(self, cfg: ModelConfig, fed: FedConfig, loss_kwargs=None,
+                 algorithm=None):
         # share the memoized ClientRun (it is stateless): async dispatches
         # and the sync round's inner scan then reuse one trace cache
-        self.client = make_client_run(cfg, fed, loss_kwargs)
+        self.client = make_client_run(cfg, fed, loss_kwargs,
+                                      algorithm=algorithm)
+        self.algorithm = self.client.algorithm
         self.fed = fed
         self._jits = _JitCache()
 
-    def _rnd(self, params_global, stacked_clients, weights, mask):
+    def _reduce(self, out, params_global, weights, server_ctx):
+        """The round's server half: algorithm prepare → weighted fold →
+        algorithm finish. Stateless algorithms keep the legacy
+        ``(new_global, losses)`` output exactly."""
+        alg = self.algorithm
+        if not alg.stateful:
+            w_news, losses = out
+            return _weighted_params(w_news, weights, params_global), losses
+        w_news, new_states, msgs, losses = out
+        w_eff = alg.reduce_prepare(w_news, params_global, new_states,
+                                   server_ctx)
+        avg = _weighted_params(w_eff, weights, params_global)
+        msg_sum = algorithms.weighted_state_sum(msgs, weights)
+        new_global, new_ctx = alg.reduce_finish(avg, msg_sum, server_ctx,
+                                                params_global)
+        return new_global, new_ctx, new_states, losses
+
+    def _rnd(self, params_global, stacked_clients, weights, mask,
+             server_ctx=(), states=()):
         # anchor (and mask) broadcast; batch stacks are per-client
-        w_news, losses = jax.vmap(
-            lambda s: self.client._run(params_global, s, mask)
-        )(stacked_clients)
-        return _weighted_params(w_news, weights, params_global), losses
+        out = jax.vmap(
+            lambda s, st: self.client._run(params_global, s, mask,
+                                           server_ctx, st)
+        )(stacked_clients, states)
+        return self._reduce(out, params_global, weights, server_ctx)
 
     def _rnd_padded(self, params_global, stacked_clients, weights, iters,
-                    mask):
-        w_news, losses = self.client._run_padded_batch(
-            params_global, stacked_clients, iters, mask)
-        return _weighted_params(w_news, weights, params_global), losses
+                    mask, server_ctx=(), states=()):
+        out = self.client._run_padded_batch(
+            params_global, stacked_clients, iters, mask, server_ctx,
+            states)
+        return self._reduce(out, params_global, weights, server_ctx)
 
     @property
     def num_compiled(self) -> int:
@@ -432,28 +530,35 @@ class SyncRound:
 
     def __call__(self, params_global, client_stacks, weights=None,
                  mask=None, iters=None, donate=None,
-                 donate_params: bool = False):
-        client_stacks, weights, mask, iters, donate, _ = self._prep(
+                 donate_params: bool = False, server_ctx=None, states=None,
+                 client_ids=None):
+        client_stacks, weights, mask, iters, donate, n = self._prep(
             params_global, client_stacks, weights, mask, iters, donate)
+        server_ctx, states = self.client._alg_inputs(
+            params_global, server_ctx, states,
+            ids=(client_ids if client_ids is not None else range(n)))
         argnums = self._donated(donate, donate_params)
         if iters is None:
             return self._jits.call(
                 "rnd", self._rnd, argnums,
-                (params_global, client_stacks, weights, mask))
+                (params_global, client_stacks, weights, mask, server_ctx,
+                 states))
         return self._jits.call(
             "pad", self._rnd_padded, argnums,
             (params_global, client_stacks, weights,
-             jnp.asarray(iters, jnp.int32), mask))
+             jnp.asarray(iters, jnp.int32), mask, server_ctx, states))
 
 
 def make_sync_round(cfg: ModelConfig, fed: FedConfig,
-                    loss_kwargs=None) -> SyncRound:
+                    loss_kwargs=None, algorithm=None) -> SyncRound:
     """The vmap engine replacing fedavg's per-client Python loop.
 
     Memoized like ``make_client_run``.
     """
-    return _cached_engine("sync", cfg, fed, loss_kwargs,
-                          lambda: SyncRound(cfg, fed, loss_kwargs))
+    return _cached_engine(
+        "sync", cfg, fed, loss_kwargs,
+        lambda: SyncRound(cfg, fed, loss_kwargs, algorithm=algorithm),
+        algorithm=algorithm)
 
 
 class ShardedSyncRound(SyncRound):
@@ -482,9 +587,9 @@ class ShardedSyncRound(SyncRound):
     """
 
     def __init__(self, cfg: ModelConfig, fed: FedConfig, mesh,
-                 loss_kwargs=None):
+                 loss_kwargs=None, algorithm=None):
         from repro.sharding import specs as sh
-        super().__init__(cfg, fed, loss_kwargs)
+        super().__init__(cfg, fed, loss_kwargs, algorithm=algorithm)
         self.mesh = mesh
         self._specs = sh.fed_round_specs(mesh)
         axis = self._specs["axis"]
@@ -494,22 +599,51 @@ class ShardedSyncRound(SyncRound):
         levels = tuple(reversed(axis)) if isinstance(axis, tuple) \
             else (axis,)
 
-        def shard_fn(params_global, stacked_shard, w_shard, it_shard, mask):
-            w_news, losses = self.client._run_padded_batch(
-                params_global, stacked_shard, it_shard, mask)
+        def _psum_levels(tree):
+            if not jax.tree_util.tree_leaves(tree):
+                return tree
+            for level in levels:     # nested: leaf aggregators upward
+                tree = jax.lax.psum(tree, level)
+            return tree
+
+        def shard_fn(params_global, stacked_shard, w_shard, it_shard, mask,
+                     server_ctx, states_shard):
+            alg = self.algorithm
+            out = self.client._run_padded_batch(
+                params_global, stacked_shard, it_shard, mask, server_ctx,
+                states_shard)
+            if not alg.stateful:
+                w_news, losses = out
+                partial = jax.tree_util.tree_map(
+                    lambda l: jnp.einsum("c,c...->...", w_shard,
+                                         l.astype(jnp.float32)), w_news)
+                partial = _psum_levels(partial)
+                new = jax.tree_util.tree_map(
+                    lambda t, p: t.astype(p.dtype), partial, params_global)
+                return new, losses
+            w_news, new_states, msgs, losses = out
+            # per-client prepare (low-rank reconstruction, ...) is
+            # elementwise on the client axis, so shard-local prepare +
+            # the nested psum equals the global prepare + flat fold
+            w_eff = alg.reduce_prepare(w_news, params_global, new_states,
+                                       server_ctx)
             partial = jax.tree_util.tree_map(
                 lambda l: jnp.einsum("c,c...->...", w_shard,
-                                     l.astype(jnp.float32)), w_news)
-            for level in levels:     # nested: leaf aggregators upward
-                partial = jax.lax.psum(partial, level)
-            new = jax.tree_util.tree_map(
+                                     l.astype(jnp.float32)), w_eff)
+            partial = _psum_levels(partial)
+            msg_sum = _psum_levels(
+                algorithms.weighted_state_sum(msgs, w_shard))
+            avg = jax.tree_util.tree_map(
                 lambda t, p: t.astype(p.dtype), partial, params_global)
-            return new, losses
+            new_global, new_ctx = alg.reduce_finish(
+                avg, msg_sum, server_ctx, params_global)
+            return new_global, new_ctx, new_states, losses
 
         c, r = self._specs["clients"], self._specs["replicated"]
+        out_specs = (r, r, c, c) if self.algorithm.stateful else (r, c)
         self._sharded_rnd = sh.shard_map(
-            shard_fn, mesh=mesh, in_specs=(r, c, c, c, r),
-            out_specs=(r, c))
+            shard_fn, mesh=mesh, in_specs=(r, c, c, c, r, r, c),
+            out_specs=out_specs)
 
     def _n_shards(self) -> int:
         axis = self._specs["axis"]
@@ -522,12 +656,16 @@ class ShardedSyncRound(SyncRound):
 
     def __call__(self, params_global, client_stacks, weights=None,
                  mask=None, iters=None, donate=None,
-                 donate_params: bool = False):
+                 donate_params: bool = False, server_ctx=None, states=None,
+                 client_ids=None):
         client_stacks, weights, mask, iters, donate, n = self._prep(
             params_global, client_stacks, weights, mask, iters, donate)
         if iters is None:        # homogeneous: every client runs full H
             iters = _full_iters(client_stacks)
         iters = np.asarray(iters, np.int32)
+        ids = client_ids if client_ids is not None else range(n)
+        server_ctx, states = self.client._alg_inputs(
+            params_global, server_ctx, states, ids=ids)
         n_shards = self._n_shards()
         pad = (-n) % n_shards
         if pad:                  # zero-weight dummies round the axis up
@@ -538,16 +676,24 @@ class ShardedSyncRound(SyncRound):
             weights = jnp.concatenate(
                 [weights, jnp.zeros((pad,), jnp.float32)])
             iters = np.concatenate([iters, np.zeros((pad,), np.int32)])
-        new, losses = self._jits.call(
+            states = jax.tree_util.tree_map(
+                lambda l: jnp.concatenate([l] + [l[:1]] * pad), states)
+        out = self._jits.call(
             "shard", self._sharded_rnd,
             self._donated(donate, donate_params),
             (params_global, client_stacks, weights,
-             jnp.asarray(iters, jnp.int32), mask))
-        return new, losses[:n]
+             jnp.asarray(iters, jnp.int32), mask, server_ctx, states))
+        if not self.algorithm.stateful:
+            new, losses = out
+            return new, losses[:n]
+        new, new_ctx, new_states, losses = out
+        new_states = jax.tree_util.tree_map(lambda l: l[:n], new_states)
+        return new, new_ctx, new_states, losses[:n]
 
 
 def make_sharded_sync_round(cfg: ModelConfig, fed: FedConfig, mesh=None,
-                            loss_kwargs=None) -> ShardedSyncRound:
+                            loss_kwargs=None,
+                            algorithm=None) -> ShardedSyncRound:
     """Sync-round engine whose client axis is split over ``mesh`` (default:
     this host's whole device set as a 1-D ``('clients',)`` mesh).
 
@@ -558,12 +704,15 @@ def make_sharded_sync_round(cfg: ModelConfig, fed: FedConfig, mesh=None,
         mesh = make_fleet_mesh()
     return _cached_engine(
         ("shard", mesh), cfg, fed, loss_kwargs,
-        lambda: ShardedSyncRound(cfg, fed, mesh, loss_kwargs))
+        lambda: ShardedSyncRound(cfg, fed, mesh, loss_kwargs,
+                                 algorithm=algorithm),
+        algorithm=algorithm)
 
 
 def make_hierarchical_sync_round(cfg: ModelConfig, fed: FedConfig,
                                  mesh=None, edges: int | None = None,
-                                 loss_kwargs=None) -> ShardedSyncRound:
+                                 loss_kwargs=None,
+                                 algorithm=None) -> ShardedSyncRound:
     """Sync-round engine over a two-level ``('edge', 'clients')`` mesh:
     the hierarchical edge-aggregator tree (clients → edge aggregators →
     server as nested psums — provably the flat weighted average; see
@@ -583,4 +732,6 @@ def make_hierarchical_sync_round(cfg: ModelConfig, fed: FedConfig,
             f"axes {mesh.axis_names}")
     return _cached_engine(
         ("hier", mesh), cfg, fed, loss_kwargs,
-        lambda: ShardedSyncRound(cfg, fed, mesh, loss_kwargs))
+        lambda: ShardedSyncRound(cfg, fed, mesh, loss_kwargs,
+                                 algorithm=algorithm),
+        algorithm=algorithm)

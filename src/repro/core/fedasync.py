@@ -156,8 +156,57 @@ def server_receive(state: ServerState, w_new, tau: int, fed: FedConfig,
                        total_updates=state.total_updates + 1)
 
 
+# per-algorithm (mix, mix_many) closures, memoized by cache_key() —
+# JitCache entries need distinct callables per entry name, and each
+# algorithm's mixing programs count separately in num_compiled
+_ALG_MIX_FNS: dict = {}
+
+
+def _alg_mix_fns(algorithm):
+    """Algorithm-aware mixing dispatchers sharing the module ``_JITS``.
+
+    ``mix`` is one receive — ``algorithm.mix`` (params + server context);
+    ``mix_many`` is the fused group scan, the algorithm-generalized
+    ``_mix_many`` (stacks models AND msgs inside the trace, threads
+    ``(params, ctx)`` through the m sequential mixes).
+    """
+    key = algorithm.cache_key()
+    if key in _ALG_MIX_FNS:
+        return _ALG_MIX_FNS[key]
+
+    def mix_impl(params, ctx, w_new, msg, beta_t):
+        return algorithm.mix(params, ctx, w_new, msg, beta_t)
+
+    def mix_many_impl(params, ctx, betas, *wm):
+        m = len(wm) // 2
+        w_stack = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *wm[:m])
+        msg_stack = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls),
+                                           *wm[m:])
+
+        def body(carry, xs):
+            p, c = carry
+            w, msg, b = xs
+            return algorithm.mix(p, c, w, msg, b), None
+
+        carry, _ = jax.lax.scan(body, (params, ctx),
+                                (w_stack, msg_stack, betas))
+        return carry
+
+    def mix(params, ctx, w_new, msg, beta_t):
+        return _JITS.call(("alg_mix",) + key, mix_impl, (),
+                          (params, ctx, w_new, msg, beta_t))
+
+    def mix_many(params, ctx, betas, *wm):
+        return _JITS.call(("alg_mix_many",) + key, mix_many_impl, (),
+                          (params, ctx, betas) + tuple(wm))
+
+    _ALG_MIX_FNS[key] = (mix, mix_many)
+    return mix, mix_many
+
+
 def server_receive_many(state: ServerState, updates, fed: FedConfig,
-                        mix_many=None, mix=None):
+                        mix_many=None, mix=None, algorithm=None,
+                        server_ctx=None):
     """Apply a group of receives ``[(w_new, τ), ...]`` in order, fused.
 
     Semantically m consecutive ``server_receive`` calls — each update's
@@ -174,7 +223,31 @@ def server_receive_many(state: ServerState, updates, fed: FedConfig,
 
     Returns ``(new_state, stalenesses, betas)`` so callers can trace each
     receive without recomputing Algorithm 1's weights.
+
+    With a *stateful* ``algorithm``, updates are ``(w_new, msg, τ)``
+    triples, the mixes are ``algorithm.mix`` (threading the server
+    context), and the return is ``(new_state, new_ctx, stals, betas)``.
+    The singleton/group split is preserved.
     """
+    if algorithm is not None and algorithm.stateful:
+        if server_ctx is None:
+            server_ctx = algorithm.ctx_for(state.params)
+        amix, amix_many = _alg_mix_fns(algorithm)
+        taus = [tau for _, _, tau in updates]
+        stals, betas = group_mixing_weights(fed, state.t, taus)
+        if len(updates) == 1:
+            w_new, msg, _ = updates[0]
+            params, new_ctx = amix(state.params, server_ctx, w_new, msg,
+                                   jnp.float32(betas[0]))
+        else:
+            params, new_ctx = amix_many(
+                state.params, server_ctx, jnp.asarray(betas, jnp.float32),
+                *[w for w, _, _ in updates],
+                *[m for _, m, _ in updates])
+        return (ServerState(params=params, t=state.t + len(updates),
+                            total_updates=(state.total_updates
+                                           + len(updates))),
+                new_ctx, stals, betas)
     if mix_many is None:
         mix_many = make_batched_server_update(fed)
     taus = [tau for _, tau in updates]

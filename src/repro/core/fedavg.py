@@ -27,7 +27,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import compile_cache, fed_engine
+from repro.core import algorithms, compile_cache, fed_engine
 from repro.core.fedasync import cached_client_step, make_client_step
 from repro.data.synthetic import stack_batches
 from repro.optim import trainable_mask
@@ -60,10 +60,34 @@ def _client_weights(n: int, data_sizes: Sequence[int] | None):
     return s / jnp.sum(s)
 
 
+def _alg_round_io(algorithm, params_global, n, client_ids):
+    """Explicit per-round state for a stateful algorithm: the memoized
+    engine may be bound to a different (equal-keyed) instance, so the
+    *caller's* instance supplies ctx/states and commits the results.
+    Returns (ids, engine-call kwargs); ids is None for stateless."""
+    if algorithm is None or not algorithm.stateful:
+        return None, {}
+    ids = list(client_ids) if client_ids is not None else list(range(n))
+    return ids, {"server_ctx": algorithm.ctx_for(params_global),
+                 "states": algorithm.stacked_states(params_global, ids)}
+
+
+def _alg_round_commit(algorithm, ids, out):
+    """Unpack an engine round output, committing stateful results back to
+    the caller's algorithm instance. Returns (new_global, losses)."""
+    if ids is None:
+        return out
+    new_global, new_ctx, new_states, losses = out
+    algorithm.set_ctx(new_ctx)
+    algorithm.store_states(ids, new_states)
+    return new_global, losses
+
+
 def fedavg_round(params_global, client_batches: Sequence, cfg: ModelConfig,
                  fed: FedConfig, engine=None,
                  mask=None, data_sizes: Sequence[int] | None = None,
-                 donate_params: bool = False):
+                 donate_params: bool = False, algorithm=None,
+                 client_ids: Sequence[int] | None = None):
     """One synchronous round as a single vmap-batched program.
 
     ``client_batches``: per-client iterable of batches (the legacy
@@ -84,14 +108,23 @@ def fedavg_round(params_global, client_batches: Sequence, cfg: ModelConfig,
     ``donate_params=True`` lets the engine alias the new global onto
     ``params_global``'s buffers — only pass it when the caller will never
     use ``params_global`` again (e.g. round r > 0 of a training loop).
+
+    ``algorithm``: a ``core.algorithms.FedAlgorithm`` (or ``None`` for the
+    default ``FedProx``, bit-identical to the pre-refactor round).
+    Stateful algorithms persist per-client state on the instance keyed by
+    ``client_ids`` (default ``range(n_clients)``).
     """
+    if algorithm is not None:
+        algorithm = algorithms.make_algorithm(algorithm)
     if engine is not None and not isinstance(engine, fed_engine.SyncRound):
         from repro.core.fleet import EngineSpec
         spec = EngineSpec.from_str(engine)
-        engine = spec.build_sync(cfg, fed)
+        engine = spec.build_sync(cfg, fed, algorithm=algorithm)
         if engine is None:                  # EngineSpec.LOOP
             return fedavg_round_loop(params_global, client_batches, cfg,
-                                     fed, mask=mask, data_sizes=data_sizes)
+                                     fed, mask=mask, data_sizes=data_sizes,
+                                     algorithm=algorithm,
+                                     client_ids=client_ids)
     # materialize up to H batches per client first: iterators may be
     # generators, so raggedness must be detected before anything is lost
     client_lists = [list(itertools.islice(b, fed.local_iters_max))
@@ -110,18 +143,22 @@ def fedavg_round(params_global, client_batches: Sequence, cfg: ModelConfig,
                 k: np.stack([[b[k] for b in bl] for bl in client_lists])
                 for k in keys}
             if engine is None:
-                engine = fed_engine.make_sync_round(cfg, fed)
+                engine = fed_engine.make_sync_round(cfg, fed,
+                                                    algorithm=algorithm)
             weights = _client_weights(len(client_lists), data_sizes)
-            new_global, losses = engine(params_global, stacked_clients,
-                                        weights=weights, mask=mask,
-                                        donate=True,
-                                        donate_params=donate_params)
+            ids, alg_kw = _alg_round_io(algorithm, params_global,
+                                        len(client_lists), client_ids)
+            out = engine(params_global, stacked_clients,
+                         weights=weights, mask=mask, donate=True,
+                         donate_params=donate_params, **alg_kw)
+            new_global, losses = _alg_round_commit(algorithm, ids, out)
             return new_global, [[float(x) for x in row]
                                 for row in np.asarray(losses)]
         return _padded_round(params_global, client_lists, cfg, fed,
-                             engine, mask, data_sizes, donate_params)
+                             engine, mask, data_sizes, donate_params,
+                             algorithm, client_ids)
     return _ragged_fallback(params_global, client_lists, cfg, fed,
-                            engine, mask, data_sizes)
+                            engine, mask, data_sizes, algorithm, client_ids)
 
 
 def _batch_sig(b):
@@ -130,7 +167,8 @@ def _batch_sig(b):
 
 
 def _padded_round(params_global, client_lists, cfg, fed, engine, mask,
-                  data_sizes, donate_params=False):
+                  data_sizes, donate_params=False, algorithm=None,
+                  client_ids=None):
     """Heterogeneous-H round as one padded masked-scan program.
 
     Batches write straight into one zero-initialized (n_clients, H_max,
@@ -153,23 +191,45 @@ def _padded_round(params_global, client_lists, cfg, fed, engine, mask,
                 out[c, i] = b[k]
         stacked[k] = out
     if engine is None:
-        engine = fed_engine.make_sync_round(cfg, fed)
+        engine = fed_engine.make_sync_round(cfg, fed, algorithm=algorithm)
     weights = _client_weights(n, data_sizes)
-    new_global, losses = engine(params_global, stacked, weights=weights,
-                                mask=mask, iters=iters, donate=True,
-                                donate_params=donate_params)
+    ids, alg_kw = _alg_round_io(algorithm, params_global, n, client_ids)
+    out = engine(params_global, stacked, weights=weights,
+                 mask=mask, iters=iters, donate=True,
+                 donate_params=donate_params, **alg_kw)
+    new_global, losses = _alg_round_commit(algorithm, ids, out)
     losses = np.asarray(losses)
     return new_global, [[float(x) for x in row[:h]]
                         for row, h in zip(losses, iters)]
 
 
 def _ragged_fallback(params_global, client_lists, cfg, fed, engine,
-                     mask, data_sizes):
+                     mask, data_sizes, algorithm=None, client_ids=None):
     """Per-client runs + weighted average when no batched program can form
     (batch *shapes* disagree — count-only raggedness takes
     ``_padded_round``): stackable clients use the scan engine,
     within-client-ragged ones drop to the per-iteration step loop, empty
-    ones return the global model."""
+    ones return the global model. Stateful algorithms route through the
+    algorithm-aware loop oracle + ``server_reduce``."""
+    if algorithm is not None and algorithm.stateful:
+        ids = list(client_ids) if client_ids is not None \
+            else list(range(len(client_lists)))
+        if mask is None:
+            mask = trainable_mask(params_global, fed.trainable)
+        ctx = algorithm.ctx_for(params_global)
+        w_news, states, msgs, losses = [], [], [], []
+        for k, bl in zip(ids, client_lists):
+            w, st, msg, ls = algorithms.client_update_loop(
+                params_global, bl, cfg, fed, algorithm, client_id=k,
+                mask=mask, server_ctx=ctx)
+            w_news.append(w)
+            states.append(st)
+            msgs.append(msg)
+            losses.append(ls)
+        new_global, _ = algorithms.server_reduce(
+            algorithm, params_global, w_news, states, msgs,
+            _client_weights(len(ids), data_sizes), server_ctx=ctx)
+        return new_global, losses
     # reuse the round engine's client (and its compile cache) if provided —
     # a fresh ClientRun per round would recompile every call
     run = engine.client if engine is not None \
@@ -208,12 +268,25 @@ def _ragged_fallback(params_global, client_lists, cfg, fed, engine,
 
 def fedavg_round_loop(params_global, client_batches: Sequence,
                       cfg: ModelConfig, fed: FedConfig, step=None, opt=None,
-                      mask=None, data_sizes: Sequence[int] | None = None):
+                      mask=None, data_sizes: Sequence[int] | None = None,
+                      algorithm=None,
+                      client_ids: Sequence[int] | None = None):
     """Legacy per-client / per-iteration loop — the engine's parity oracle.
 
     One jitted step dispatch and one ``float(loss)`` host sync per local
     iteration. Returns (new_global_params, per_client_losses).
+    Stateful algorithms route through the algorithm-aware loop oracle
+    (``algorithms.client_update_loop`` + ``server_reduce``); stateless
+    ones keep the legacy step, bit-identical to the pre-refactor loop.
     """
+    if algorithm is not None:
+        algorithm = algorithms.make_algorithm(algorithm)
+        if algorithm.stateful:
+            client_lists = [list(itertools.islice(b, fed.local_iters_max))
+                            for b in client_batches]
+            return _ragged_fallback(params_global, client_lists, cfg, fed,
+                                    None, mask, data_sizes, algorithm,
+                                    client_ids)
     if step is None:
         step, opt = make_client_step(cfg, fed)
     if mask is None:

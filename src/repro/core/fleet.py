@@ -126,17 +126,20 @@ class EngineSpec(enum.Enum):
                 f"{[m.value for m in allowed]}")
         return spec
 
-    def build_sync(self, cfg, fed, mesh=None):
+    def build_sync(self, cfg, fed, mesh=None, algorithm=None):
         """The sync-round engine for this member (None for LOOP — the
-        caller owns the per-iteration oracle path)."""
+        caller owns the per-iteration oracle path). ``algorithm`` is a
+        ``core.algorithms.FedAlgorithm`` (None = the default FedProx)."""
         from repro.core import fed_engine
         if self is EngineSpec.SCAN:
-            return fed_engine.make_sync_round(cfg, fed)
+            return fed_engine.make_sync_round(cfg, fed,
+                                              algorithm=algorithm)
         if self is EngineSpec.SHARD:
-            return fed_engine.make_sharded_sync_round(cfg, fed, mesh=mesh)
+            return fed_engine.make_sharded_sync_round(cfg, fed, mesh=mesh,
+                                                      algorithm=algorithm)
         if self is EngineSpec.HIER:
-            return fed_engine.make_hierarchical_sync_round(cfg, fed,
-                                                           mesh=mesh)
+            return fed_engine.make_hierarchical_sync_round(
+                cfg, fed, mesh=mesh, algorithm=algorithm)
         return None
 
 
@@ -224,6 +227,18 @@ class FleetSpec:
         return int(round(fed.local_iters_max
                          - frac * (fed.local_iters_max
                                    - fed.local_iters_min)))
+
+    def capacity(self, k: int, lo: float = 0.5, hi: float = 1.0) -> float:
+        """Relative compute capacity of client k's device: the profile's
+        speed rank among the spec's templates mapped linearly from ``hi``
+        (fastest) to ``lo`` (slowest) — the same rank rule as ``iters``,
+        consumed by capacity-adaptive algorithms
+        (``algorithms.LowRankSubmodel``)."""
+        speeds = sorted(p.epoch_seconds for p in self.profiles)
+        rank = speeds.index(self.profiles[self.profile_index(k)]
+                            .epoch_seconds)
+        frac = rank / max(len(self.profiles) - 1, 1)
+        return float(hi - frac * (hi - lo))
 
     def data(self, k: int, perm: np.ndarray | None = None,
              visit: int = 0):
@@ -413,6 +428,26 @@ class Fleet:
                                                 - fed.local_iters_min)))
             self._iters_cache[key] = H
         return int(self._iters_cache[key][k])
+
+    def capacity(self, k: int, lo: float = 0.5, hi: float = 1.0) -> float:
+        """Relative compute capacity of client k ∈ [lo, hi] by device
+        speed rank — the ``iters`` rule's continuous twin (fastest device
+        ``hi``, slowest ``lo``). Spec fleets rank the client's profile
+        among the spec templates (O(#profiles)); list fleets use the
+        cached fleet-wide argsort. Capacity-adaptive algorithms
+        (``algorithms.LowRankSubmodel.bind_fleet``) scale their per-client
+        compression budget by this."""
+        if self.spec is not None:
+            return self.spec.capacity(k, lo, hi)
+        key = ("capacity", lo, hi)
+        if key not in self._iters_cache:
+            order = np.argsort([p.epoch_seconds for p in self._profiles])
+            caps = np.empty(self.population, np.float64)
+            for rank, j in enumerate(order):
+                frac = rank / max(self.population - 1, 1)
+                caps[int(j)] = hi - frac * (hi - lo)
+            self._iters_cache[key] = caps
+        return float(self._iters_cache[key][k])
 
     @property
     def resident(self) -> int:

@@ -29,7 +29,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import fed_engine, fedasync, fedavg
+from repro.core import algorithms, fed_engine, fedasync, fedavg
 from repro.core.compression import roundtrip
 from repro.core.fedasync import ServerState
 # DeviceProfile and the Jetson fleets live in core/fleet now; re-exported
@@ -185,7 +185,7 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
               eval_fn: Optional[Callable] = None,
               eval_every: int = 10, engine="scan",
               window: float = 0.0,
-              window_policy: str = "skip") -> SimResult:
+              window_policy: str = "skip", algorithm=None) -> SimResult:
     """Virtual-clock run of asynchronous federated learning.
 
     ``fleet`` is a ``core.fleet.Fleet`` (or a ``FleetSpec``, which is
@@ -230,13 +230,27 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
     grouped client idles until the group's last receive before picking up
     its next model; ``eval_fn`` granularity also coarsens to group
     boundaries. ``window=0`` (default) is the exact event-by-event loop.
+
+    ``algorithm``: a ``core.algorithms.FedAlgorithm`` (or its registry
+    name). ``None`` keeps the exact legacy FedProx paths; a stateful
+    algorithm threads per-client state through local runs, sends
+    ``(w_new, msg)`` over the (scheduler's virtual) wire and mixes with
+    ``algorithm.mix`` — the staleness-damped generalization of Algorithm
+    1's receive. Updates route through the algorithm's wire codec when
+    ``fed.compress_bits`` is set or the algorithm demands it
+    (``wire_always``, e.g. low-rank projection).
     """
     fleet = Fleet.resolve(fleet, client_data, fed)
+    alg = (algorithms.make_algorithm(algorithm)
+           if algorithm is not None else None)
+    if alg is not None:
+        alg.bind_fleet(fleet)
+    stateful = alg is not None and alg.stateful
     espec = EngineSpec.from_str(engine, allowed=ASYNC_ENGINES)
     rng = np.random.default_rng(fed.seed)
     sample_rng = np.random.default_rng((fed.seed, 0xA51C))
     if espec is EngineSpec.SCAN:
-        run = fed_engine.make_client_run(cfg, fed)
+        run = fed_engine.make_client_run(cfg, fed, algorithm=alg)
     else:
         step, opt = fedasync.cached_client_step(cfg, fed)
     mask = trainable_mask(params0, fed.trainable)
@@ -256,11 +270,26 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
     staleness_hist: dict = {}
     group_hist: dict = {}
 
+    def _empty_result(k):
+        """Out-of-data client: the unchanged global goes back (stateful
+        algorithms still finalize at zero iterations so the msg channel —
+        SCAFFOLD's Δc=0, low-rank's capacity — stays well-formed)."""
+        if not stateful:
+            return (server.params, [])
+        st = alg.state_for(k, server.params)
+        w, st2, msg = alg.client_finalize(
+            server.params, server.params, st, jnp.int32(0),
+            alg.ctx_for(server.params), fed)
+        alg.store_state(k, st2)
+        return ((w, msg), [])
+
     def _run_clients(ks):
         """Local training for clients ``ks`` from the *current* server
-        model. Returns {k: (w_new, losses)}. Concurrent scan dispatches
-        batch as one padded program; the per-client path covers the rest
-        (single dispatches, the loop oracle, batches that won't pad)."""
+        model. Returns {k: (w_new, losses)} — the w_new slot holds
+        ``(w_new, msg)`` for stateful algorithms. Concurrent scan
+        dispatches batch as one padded program; the per-client path covers
+        the rest (single dispatches, the loop oracle, batches that won't
+        pad)."""
         results = {}
         if espec is EngineSpec.SCAN:
             stacks = {k: stack_batches(fleet.data(k)(), limit=H[k])
@@ -273,7 +302,22 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
                         H_max=fed.local_iters_max)
                 except ValueError:        # shapes disagree across clients
                     padded = None
-                if padded is not None:
+                if padded is not None and stateful:
+                    w_news, new_states, msgs, loss_arr = run.run_batch(
+                        server.params, padded, iters, mask=mask,
+                        donate=True,
+                        server_ctx=alg.ctx_for(server.params),
+                        states=alg.stacked_states(server.params, live),
+                        client_ids=live)
+                    la = jax.device_get(loss_arr)    # single host sync
+                    per_client = run.unstack((w_news, new_states, msgs),
+                                             len(live))
+                    for j, k in enumerate(live):
+                        w, st, msg = per_client[j]
+                        alg.store_state(k, st)
+                        results[k] = ((w, msg),
+                                      [float(la[j, iters[j] - 1])])
+                elif padded is not None:
                     w_news, loss_arr = run.run_batch(
                         server.params, padded, iters, mask=mask,
                         donate=True)
@@ -287,13 +331,28 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
                 if k in results:
                     continue
                 if stacks[k] is None:            # client out of data
-                    results[k] = (server.params, [])
+                    results[k] = _empty_result(k)
+                elif stateful:
+                    w, st, msg, loss_arr = run(
+                        server.params, stacks[k], mask=mask, donate=True,
+                        server_ctx=alg.ctx_for(server.params),
+                        state=alg.state_for(k, server.params))
+                    alg.store_state(k, st)
+                    results[k] = ((w, msg),
+                                  [float(jax.device_get(loss_arr)[-1])])
                 else:
                     w_new, loss_arr = run(server.params, stacks[k],
                                           mask=mask, donate=True)
                     # one explicit transfer; indexing happens on host
                     results[k] = (w_new,
                                   [float(jax.device_get(loss_arr)[-1])])
+        elif alg is not None:
+            for k in ks:
+                w_new, st, msg, losses = algorithms.client_update_loop(
+                    server.params, fleet.data(k)(), cfg, fed, alg,
+                    client_id=k, num_iters=H[k], mask=mask,
+                    server_ctx=alg.ctx_for(server.params))
+                results[k] = ((w_new, msg) if stateful else w_new, losses)
         else:
             for k in ks:
                 w_new, _, losses = fedasync.client_update(
@@ -312,7 +371,14 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
         results = _run_clients(ks)
         for k in ks:
             w_new, losses = results[k]
-            if fed.compress_bits:
+            if alg is not None and (fed.compress_bits or alg.wire_always):
+                # the algorithm's wire codec (int8/int4 deltas, low-rank
+                # factors); decode against the anchor the server handed out
+                w, msg = w_new if stateful else (w_new, ())
+                wire = alg.encode(w, msg, server.params, fed)
+                w, msg = alg.decode(wire, server.params, fed)
+                w_new = (w, msg) if stateful else w
+            elif fed.compress_bits:
                 # int8 delta on the wire; server reconstructs against the
                 # anchor it handed out (communication-efficient FL, §II)
                 w_new, _ = roundtrip(w_new, server.params,
@@ -334,9 +400,16 @@ def run_async(params0, cfg: ModelConfig, fed: FedConfig,
         group = sched.pop_window(server.t, fed.max_staleness,
                                  fed.global_epochs - server.t)
         t0 = server.t
-        server, stals, betas = fedasync.server_receive_many(
-            server, [(w_new, tau) for _, _, w_new, tau, _ in group], fed,
-            mix_many=mix_many)
+        if stateful:
+            server, new_ctx, stals, betas = fedasync.server_receive_many(
+                server, [(w, msg, tau)
+                         for _, _, (w, msg), tau, _ in group], fed,
+                algorithm=alg, server_ctx=alg.ctx_for(server.params))
+            alg.set_ctx(new_ctx)
+        else:
+            server, stals, betas = fedasync.server_receive_many(
+                server, [(w_new, tau) for _, _, w_new, tau, _ in group],
+                fed, mix_many=mix_many)
         for i, ((ft, k, _, _, loss), st, bt) in enumerate(
                 zip(group, stals, betas)):
             now = ft
@@ -384,7 +457,8 @@ def run_sync(params0, cfg: ModelConfig, fed: FedConfig,
              client_data: Optional[Sequence[Callable[[], Iterable]]] = None,
              iters_per_epoch: int = 1, jitter: float = 0.0,
              eval_fn: Optional[Callable] = None,
-             eval_every: int = 10, engine="scan") -> SimResult:
+             eval_every: int = 10, engine="scan",
+             algorithm=None) -> SimResult:
     """Virtual-clock synchronous FedAvg: each round costs max(client time).
 
     ``fleet`` is a ``core.fleet.Fleet`` / ``FleetSpec``; the legacy
@@ -412,8 +486,17 @@ def run_sync(params0, cfg: ModelConfig, fed: FedConfig,
     new global aliases their buffers; ``params0`` itself is copied once up
     front and never donated), so an ``eval_fn`` must evaluate the params
     it is handed immediately, not stash them for later.
+
+    ``algorithm``: a ``core.algorithms.FedAlgorithm`` (or its registry
+    name); ``None`` keeps the exact legacy FedProx round. Stateful
+    algorithms persist per-client state on the instance across rounds,
+    keyed by the sampled client ids.
     """
     fleet = Fleet.resolve(fleet, client_data, fed)
+    alg = (algorithms.make_algorithm(algorithm)
+           if algorithm is not None else None)
+    if alg is not None:
+        alg.bind_fleet(fleet)
     espec = EngineSpec.from_str(engine, allowed=SYNC_ENGINES)
     rng = np.random.default_rng(fed.seed)
     sample_rng = np.random.default_rng((fed.seed, 0x5A3D))
@@ -421,7 +504,7 @@ def run_sync(params0, cfg: ModelConfig, fed: FedConfig,
         step, opt = fedasync.cached_client_step(cfg, fed)
         round_engine = None
     else:
-        round_engine = espec.build_sync(cfg, fed)
+        round_engine = espec.build_sync(cfg, fed, algorithm=alg)
     mask = trainable_mask(params0, fed.trainable)
     params = params0
     if round_engine is not None:
@@ -448,10 +531,13 @@ def run_sync(params0, cfg: ModelConfig, fed: FedConfig,
             params, losses = fedavg.fedavg_round(params, batches, cfg, fed,
                                                  engine=round_engine,
                                                  mask=mask,
-                                                 donate_params=True)
+                                                 donate_params=True,
+                                                 algorithm=alg,
+                                                 client_ids=ids)
         else:
             params, losses = fedavg.fedavg_round_loop(
-                params, batches, cfg, fed, step=step, opt=opt, mask=mask)
+                params, batches, cfg, fed, step=step, opt=opt, mask=mask,
+                algorithm=alg, client_ids=ids)
         dt = max(_client_time(fleet.profile(k), fed.local_iters_max,
                               iters_per_epoch, rng, jitter)
                  for k in ids)

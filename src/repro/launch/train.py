@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.checkpoint import save_params
 from repro.configs import get_config
 from repro.core import distill, simulator
+from repro.core.algorithms import ALGORITHMS, make_algorithm
 from repro.core.fleet import (ASYNC_ENGINES, EngineSpec, Fleet, FleetSpec,
                               JETSON_FLEET_HMDB51)
 from repro.data import BatchLoader, iid_partition, make_dataset_for
@@ -75,6 +76,15 @@ def main(argv=None):
                          "aggregator tree over the ('edge','clients') "
                          "mesh (both sync-only), or the legacy "
                          "per-iteration loop")
+    ap.add_argument("--algorithm", choices=sorted(ALGORITHMS),
+                    default="fedprox",
+                    help="federated algorithm (core/algorithms.py): "
+                         "'fedprox' is the paper's proximal local SGD "
+                         "(default; identical to the pre-algorithm-layer "
+                         "behavior), 'scaffold' adds SCAFFOLD control "
+                         "variates against client drift, 'lowrank' ships "
+                         "capacity-scaled low-rank/masked submodel "
+                         "updates for constrained uplinks")
     ap.add_argument("--async-window", type=float, default=0.0,
                     help="staleness-bounded micro-batching window W in "
                          "virtual seconds (async mode only): receives "
@@ -172,6 +182,9 @@ def main(argv=None):
         kwargs = {}
         if args.mode == "async":
             kwargs["window"] = args.async_window
+        if args.algorithm != "fedprox":
+            # fedprox stays on the (bit-identical) default paths
+            kwargs["algorithm"] = make_algorithm(args.algorithm)
         res = run(params, cfg, fed, fleet, engine=eng, **kwargs)
         params = res.params
         print(f"  virtual wall-clock {res.wall_clock_s:.0f}s "
@@ -181,7 +194,8 @@ def main(argv=None):
             if args.async_window > 0:
                 print(f"  receive-group histogram (W={args.async_window}): "
                       f"{res.group_hist}")
-        result = {"mode": args.mode, "final_loss": res.final_loss,
+        result = {"mode": args.mode, "algorithm": args.algorithm,
+                  "final_loss": res.final_loss,
                   "virtual_wall_s": res.wall_clock_s,
                   "real_wall_s": time.time() - t0}
 

@@ -1,7 +1,8 @@
 from repro.optim.optimizers import (Optimizer, adamw, sgd, trainable_mask,
                                     apply_mask)
-from repro.optim.proximal import proximal_grad
+from repro.optim.proximal import control_variate_grad, proximal_grad
 from repro.optim.schedules import constant, cosine, inverse_sqrt
 
 __all__ = ["Optimizer", "sgd", "adamw", "trainable_mask", "apply_mask",
-           "proximal_grad", "constant", "cosine", "inverse_sqrt"]
+           "proximal_grad", "control_variate_grad", "constant", "cosine",
+           "inverse_sqrt"]

@@ -20,6 +20,17 @@ def proximal_grad(grads, params, anchor, theta: float):
         grads, params, anchor)
 
 
+def control_variate_grad(grads, c, c_k):
+    """SCAFFOLD drift correction (Karimireddy et al. 2020, Alg. 1 line 10):
+    g ← g + c − c_k, with the variates accumulated in f32 and the result
+    cast back to the gradient dtype. Composes after ``proximal_grad`` —
+    the paper's proximal term and the control variate are independent
+    corrections to the same local gradient."""
+    return jax.tree_util.tree_map(
+        lambda g, a, b: (g.astype(jnp.float32) + a - b).astype(g.dtype),
+        grads, c, c_k)
+
+
 def proximal_penalty(params, anchor, theta: float):
     """(θ/2)·||w - w_t||² as a scalar (for logging / loss reporting)."""
     if theta == 0.0:

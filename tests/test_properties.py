@@ -274,3 +274,89 @@ def test_ssd_decode_kernel_matches_einsum(H, P, N, n_pad, seed):
                                rtol=1e-5, atol=1e-5)
     for row in pad_rows:
         assert bool(jnp.all(st_got[row] == st_in[row]))
+
+
+# ---------------------------------------------------------------------------
+# Wire codec (core/compression.py): the int8 / packed-int4 delta quantizer
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([4, 8]),
+       size=st.integers(1, 33), scale=st.floats(1e-4, 10.0))
+@settings(max_examples=40, deadline=None)
+def test_quantize_delta_error_bound(seed, bits, size, scale):
+    """Symmetric quantization error is bounded by scale/2 per element,
+    for both wire widths (int4's [-7, 7] range keeps the bound exact)."""
+    from repro.core import compression
+    r = np.random.default_rng(seed)
+    w = {"a": jnp.asarray(r.standard_normal(size) * scale, jnp.float32),
+         "b": jnp.asarray(r.standard_normal((3, size)) * scale,
+                          jnp.float32)}
+    anchor = jax.tree_util.tree_map(jnp.zeros_like, w)
+    upd = compression.quantize_delta(w, anchor, bits)
+    assert upd.bits == bits
+    deq = compression.dequantize_delta(upd, anchor)
+    for wl, dl, s in zip(jax.tree_util.tree_leaves(w),
+                         jax.tree_util.tree_leaves(deq),
+                         jax.tree_util.tree_leaves(upd.scale)):
+        err = np.max(np.abs(np.asarray(wl) - np.asarray(dl)))
+        assert err <= float(s) / 2 + 1e-7
+
+
+@given(size=st.integers(1, 64), bits=st.sampled_from([4, 8]))
+@settings(max_examples=20, deadline=None)
+def test_quantize_delta_zero_delta_exact(size, bits):
+    """An all-zero delta survives the roundtrip exactly: q is all zeros
+    and the reconstruction equals the anchor bit-for-bit."""
+    from repro.core import compression
+    w = {"x": jnp.linspace(-1.0, 1.0, size, dtype=jnp.float32)}
+    out, upd = compression.roundtrip(w, w, bits)
+    assert not np.asarray(upd.q["x"]).any()
+    assert (np.asarray(out["x"]) == np.asarray(w["x"])).all()
+
+
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([4, 8]))
+@settings(max_examples=20, deadline=None)
+def test_quantize_delta_preserves_bf16_dtype(seed, bits):
+    """bf16 anchors reconstruct to bf16 — the codec must not leak f32
+    leaves into a mixed-precision model."""
+    from repro.core import compression
+    r = np.random.default_rng(seed)
+    anchor = {"w": jnp.asarray(r.standard_normal(17), jnp.bfloat16)}
+    w = {"w": anchor["w"] + jnp.asarray(0.25, jnp.bfloat16)}
+    out, _ = compression.roundtrip(w, anchor, bits)
+    assert out["w"].dtype == jnp.bfloat16
+
+
+@given(seed=st.integers(0, 2**31 - 1), size=st.integers(1, 65))
+@settings(max_examples=40, deadline=None)
+def test_pack_int4_roundtrip(seed, size):
+    """pack/unpack is the identity on int4-range values, including odd
+    tails, and the packed payload is the accounted (size+1)//2 bytes."""
+    from repro.core import compression
+    r = np.random.default_rng(seed)
+    q = r.integers(-7, 8, size=size).astype(np.int8)
+    packed = compression.pack_int4(q)
+    assert packed.nbytes == compression.packed_nbytes(size, 4)
+    back = compression.unpack_int4(packed, size)
+    assert (back == q).all()
+
+
+@given(size=st.integers(1, 40), scale=st.floats(1e-3, 3.0))
+@settings(max_examples=20, deadline=None)
+def test_int4_wire_half_of_int8(size, scale):
+    """Accounting: int4 payload bytes are (size+1)//2 per leaf, int8's
+    are size; both add 4 bytes/leaf for the f32 scale."""
+    from repro.core import compression
+    w = {"x": jnp.full((size,), scale, jnp.float32)}
+    a = {"x": jnp.zeros((size,), jnp.float32)}
+    u8 = compression.quantize_delta(w, a, 8)
+    u4 = compression.quantize_delta(w, a, 4)
+    assert u8.wire_bytes == size + 4
+    assert u4.wire_bytes == (size + 1) // 2 + 4
+
+
+def test_quantize_delta_rejects_bad_bits():
+    from repro.core import compression
+    w = {"x": jnp.ones((3,), jnp.float32)}
+    with pytest.raises(ValueError, match="wire width"):
+        compression.quantize_delta(w, w, bits=3)
